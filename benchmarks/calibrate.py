@@ -1,0 +1,31 @@
+"""Calibration constants derivation (documents sim/hardware.py anchors)."""
+
+from __future__ import annotations
+
+from repro.core.wrapper import measure_wrapper
+from repro.sim import hardware
+
+
+def bench() -> list:
+    rows = []
+    comp = hardware.paper_staged()
+    rows.append((
+        "calibrate/workload_gflops_per_frame",
+        0.0,
+        f"gflops={comp.total_flops() / 1e9:.2f}",
+    ))
+    for name, tier in hardware.paper_tiers().items():
+        rows.append((
+            f"calibrate/{name}_effective_tflops",
+            0.0,
+            f"tflops={tier.accel_flops / 1e12:.3f};anchor_fps="
+            f"{hardware.SERVER_NATIVE_FPS if name == 'server' else hardware.LAPTOP_NATIVE_FPS}",
+        ))
+    wm = measure_wrapper()
+    rows.append((
+        "calibrate/host_staging_measured",
+        wm.call_overhead * 1e6,
+        f"bw_mb_s={wm.serialization_bandwidth / 1e6:.0f};"
+        "note=this_hosts_analogue_of_JNI_tax",
+    ))
+    return rows

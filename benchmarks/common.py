@@ -1,0 +1,36 @@
+"""Benchmark helpers: timing + CSV row emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable, Tuple
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall time of fn(*args) in seconds (block_until_ready-aware)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        _block(out)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        _block(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def _block(out):
+    import jax
+
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def emit(rows: Iterable[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

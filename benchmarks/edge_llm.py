@@ -1,0 +1,25 @@
+"""LLM edge-decode planning table (the paper's technique generalized to
+the assigned architectures): tokens/s per policy per arch."""
+
+from __future__ import annotations
+
+from repro.configs import registry
+from repro.core.offload import Policy
+from repro.serving import edge
+from repro.sim import hardware
+
+
+def bench() -> list:
+    env = hardware.edge_tpu_environment()
+    rows = []
+    for arch in registry.list_archs():
+        cfg = registry.get(arch)
+        row = edge.compare_archs([cfg], env)[cfg.name]
+        best = max(row["local"], row["forced"], row["auto"])
+        rows.append((
+            f"edge_llm/{arch}",
+            1e6 / max(best, 1e-9),
+            f"local_tps={row['local']:.2f};forced_tps={row['forced']:.2f};"
+            f"auto_tps={row['auto']:.2f};state_kb={row['state_bytes'] / 1024:.1f}",
+        ))
+    return rows

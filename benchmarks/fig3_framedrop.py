@@ -1,0 +1,32 @@
+"""Paper Fig. 3: serial frame dependency => frame drops vs loop time.
+
+Sweeps the per-frame loop time through the regimes the figure draws
+(faster than the 33 ms budget, at it, and the paper's hypothetical
+150 ms), reporting achieved throughput, drop rate and the mean gap the
+PSO search must cover.
+"""
+
+from __future__ import annotations
+
+from repro.sim.clock import FRAME_PERIOD, FrameLoop
+
+
+def bench() -> list:
+    rows = []
+    sweep_ms = [10, 25, 33.3, 50, 77, 100, 150, 200]
+    loop = FrameLoop()
+    for ms in sweep_ms:
+        stats = loop.run(lambda i, gap: ms / 1e3, 300)
+        note = ""
+        if abs(ms - 150) < 1e-9:
+            note = ";paper_fig3_example"
+        elif ms <= FRAME_PERIOD * 1e3:
+            note = ";realtime"
+        rows.append((
+            f"fig3/loop_{ms:g}ms",
+            ms * 1e3,
+            f"processed_fps={stats.achieved_fps:.1f};"
+            f"drop_pct={stats.drop_rate * 100:.1f};"
+            f"mean_gap={stats.mean_gap:.2f}{note}",
+        ))
+    return rows

@@ -1,0 +1,41 @@
+"""Paper Fig. 4: native vs RAPID-wrapped (no offloading), both machines.
+
+One row per bar of the figure: loop time (us/frame) and sustained fps.
+"""
+
+from __future__ import annotations
+
+from repro.core import offload
+from repro.core.offload import Policy
+from repro.sim import hardware, runtime
+
+from benchmarks.common import Row
+
+
+def bench() -> list:
+    comp = hardware.paper_staged()
+    tiers = hardware.paper_tiers()
+    rows = []
+    paper_refs = {
+        ("server", False): "paper~42fps",
+        ("server", True): "paper:reduced",
+        ("laptop", False): "paper~13fps",
+        ("laptop", True): "paper:slightly_reduced",
+    }
+    for machine in ("server", "laptop"):
+        for wrapped in (False, True):
+            env = offload.Environment(
+                client=tiers[machine], server=tiers["server"],
+                link=hardware.links.GIGABIT_ETHERNET,
+                wrapper=hardware.paper_wrapper(), wrapped=wrapped,
+            )
+            grans = ("single_step", "multi_step") if wrapped else ("single_step",)
+            for gran in grans:
+                r = runtime.analytic_run(comp, env, Policy.LOCAL, gran, 300)
+                tag = "wrapped" if wrapped else "native"
+                rows.append((
+                    f"fig4/{machine}_{tag}_{gran}",
+                    r.stats.mean_loop_time * 1e6,
+                    f"fps={r.fps:.1f};{paper_refs[(machine, wrapped)]}",
+                ))
+    return rows

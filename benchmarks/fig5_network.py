@@ -1,0 +1,27 @@
+"""Paper Fig. 5: offloaded laptop->server over Ethernet/Wi-Fi,
+{Forced, Auto} x {Single-Step, Multi-Step}."""
+
+from __future__ import annotations
+
+from repro.core.offload import Policy
+from repro.sim import hardware, runtime
+
+
+def bench() -> list:
+    comp = hardware.paper_staged()
+    rows = []
+    for net in ("gigabit_ethernet", "wifi_802.11"):
+        env = hardware.paper_environment(net)
+        for pol in (Policy.FORCED, Policy.AUTO):
+            for gran in ("single_step", "multi_step"):
+                r = runtime.analytic_run(comp, env, pol, gran, 300)
+                plan = "".join(
+                    "S" if p == "server" else "C" for p in r.plan.placements
+                )
+                rows.append((
+                    f"fig5/{net}_{pol.value}_{gran}",
+                    r.stats.mean_loop_time * 1e6,
+                    f"fps={r.fps:.1f};plan={plan};"
+                    f"up_kb={r.plan.uplink_bytes / 1024:.0f}",
+                ))
+    return rows

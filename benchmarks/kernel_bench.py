@@ -1,0 +1,68 @@
+"""render_score Pallas kernel vs jnp reference (interpret mode on CPU —
+correctness-grade timing; on TPU flip ops.DEFAULT_INTERPRET)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import handmodel, objective
+from repro.core.camera import Camera
+from repro.kernels import ops, ref
+
+from benchmarks.common import time_fn
+
+
+def bench() -> list:
+    cam = Camera(width=64, height=64, fx=60.0, fy=60.0, cx=31.5, cy=31.5)
+    n = 16
+    hs = jnp.stack([handmodel.default_pose(0.4).at[0].add(0.01 * i) for i in range(n)])
+    spheres = jax.vmap(handmodel.pack_spheres)(hs)
+    rays = cam.rays_flat()
+    d_o = objective.render_depth(hs[0], cam).reshape(-1)
+    mask = d_o < 5.0
+
+    rows = []
+    work = n * rays.shape[0] * handmodel.NUM_SPHERES
+    t_ref = time_fn(
+        jax.jit(lambda s: ref.render_score(s, rays, d_o, mask)), spheres
+    )
+    rows.append((
+        "kernel/render_score_ref",
+        t_ref * 1e6,
+        f"particle_px_sphere_per_s={work / t_ref:.2e}",
+    ))
+    t_k = time_fn(
+        jax.jit(lambda s: ops.render_score(s, rays, d_o, mask)), spheres
+    )
+    rows.append((
+        "kernel/render_score_pallas_interpret",
+        t_k * 1e6,
+        f"particle_px_sphere_per_s={work / t_k:.2e};interpret=True",
+    ))
+
+    # second kernel: fused swarm update
+    from repro.kernels import pso_ref, pso_update as kmod
+
+    np_, d = 32, 32
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 6)
+    lo, hi = -jnp.ones((d,)), jnp.ones((d,))
+    x = jax.random.uniform(ks[0], (np_, d), minval=-1, maxval=1)
+    v = jax.random.normal(ks[1], (np_, d)) * 0.1
+    pb = jax.random.uniform(ks[2], (np_, d), minval=-1, maxval=1)
+    gb = pb[0]
+    r1 = jax.random.uniform(ks[3], (np_, d))
+    r2 = jax.random.uniform(ks[4], (np_, d))
+    consts = dict(inertia=0.7298, cognitive=1.49618, social=1.49618,
+                  velocity_clip=0.5)
+    t_upd = time_fn(
+        jax.jit(lambda *a: kmod.pso_update(*a, **consts)),
+        x, v, pb, gb, r1, r2, lo, hi,
+    )
+    rows.append((
+        "kernel/pso_update_pallas_interpret",
+        t_upd * 1e6,
+        f"particle_dims_per_s={np_ * d / t_upd:.2e};interpret=True",
+    ))
+    return rows

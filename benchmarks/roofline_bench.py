@@ -1,0 +1,36 @@
+"""Roofline table from the dry-run artifacts (benchmark per paper-style
+table: one row per (arch, shape, mesh))."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _rows_for(dir_path: str, tag: str) -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dir_path, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        step = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((
+            f"roofline_{tag}/{rec['arch']}_{rec['shape']}_{rec['mesh']}",
+            step * 1e6,
+            f"dom={r['dominant']};compute_s={r['compute_s']:.3e};"
+            f"memory_s={r['memory_s']:.3e};collective_s={r['collective_s']:.3e};"
+            f"useful={r['useful_ratio']:.2f}",
+        ))
+    return rows
+
+
+def bench() -> list:
+    rows = _rows_for("experiments/dryrun", "baseline")
+    rows += _rows_for("experiments/dryrun_opt", "optimized")
+    if not rows:
+        rows.append(("roofline/no_dryrun_artifacts", 0.0,
+                     "run=python -m repro.launch.dryrun"))
+    return rows

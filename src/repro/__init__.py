@@ -1,0 +1,23 @@
+"""repro — Edge-Offloaded Real-Time Generative Inference in JAX.
+
+Reproduction + extension of "On the Feasibility of Real-Time 3D Hand
+Tracking using Edge GPGPU Acceleration" (CS.DC 2018). See README.md and
+DESIGN.md.
+
+Subpackage map:
+  core       the paper's contribution (tracker, PSO, offload engine)
+  kernels    Pallas TPU kernel for the population evaluation hot spot
+  net, sim   links, tiers, real-time clock, deployment simulator
+  models     the six architecture families (scan-over-layers JAX)
+  configs    10 assigned architectures + input shapes + registry
+  sharding   PartitionSpec rules for the production meshes
+  serving    batched / continuous engines, tiered edge placement
+  optim, data, checkpoint   training substrate
+  launch     meshes, multi-pod dry-run, train/serve drivers
+  roofline   HLO cost walker + report generation
+
+NOTE: importing this package never initializes jax device state; the
+512-device override is exclusively repro.launch.dryrun's.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+"""Sharding-aware npz checkpointing."""
+
+from repro.checkpoint import io  # noqa: F401

@@ -1,0 +1,4 @@
+"""Architecture configs: 10 assigned architectures + input shapes."""
+
+from repro.configs import registry, shapes  # noqa: F401
+from repro.configs.base import ArchConfig  # noqa: F401

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+* ``handmodel``  — 27-DoF kinematic hand model -> sphere primitives.
+* ``camera``     — pinhole RGBD camera, precomputed rays.
+* ``objective``  — Eq. (2) clamped depth discrepancy E_D (+ rendering).
+* ``pso``        — Particle Swarm Optimization (lax loops, shardable eval).
+* ``tracker``    — the 4-stage per-frame pipeline (Fig. 2).
+* ``stages``     — StagedComputation: byte/FLOP-annotated stage graphs.
+* ``offload``    — placement policies Local/Forced/Auto + exact cost model.
+* ``wrapper``    — container ("JNI") overhead measurement/calibration.
+"""
+
+from repro.core import (  # noqa: F401
+    camera,
+    handmodel,
+    objective,
+    offload,
+    pso,
+    stages,
+    tracker,
+    wrapper,
+)

@@ -1,0 +1,154 @@
+"""Staged computations with byte/FLOP annotations.
+
+The paper's Fig. 2: the per-frame hand-tracking optimization consists of
+four discrete steps that can be exposed to the offloading framework either
+individually ("Multi-Step") or fused ("Single-Step"). This module gives
+that structure a first-class representation the placement engine
+(``core.offload``) can reason about: each stage declares its FLOPs and the
+data items it consumes/produces, and each data item knows its size, so
+plan cost (compute + serialization + network) is computable analytically.
+
+The same abstraction describes an LLM ``serve_step`` (embed -> blocks ->
+head) — see ``serving/edge.py`` — which is how the paper's technique
+generalizes to the assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+CLIENT = "client"
+SERVER = "server"
+
+
+@dataclasses.dataclass(frozen=True)
+class DataItem:
+    """A named datum flowing between stages.
+
+    ``origin`` is where the item first materializes: CLIENT for sensor
+    inputs (camera frames, the previous-frame solution h_t) and stage
+    outputs get their producer's placement at plan-evaluation time.
+    """
+
+    name: str
+    nbytes: int
+    origin: str = CLIENT
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One offloadable step.
+
+    flops: arithmetic cost of the stage (population evaluation dominates).
+    parallel_fraction: the portion of ``flops`` that scales with the
+      executing tier's accelerator (the GPGPU part); the rest runs at
+      scalar speed. The paper's 100x GPGPU speedup claim only applies to
+      the parallel fraction — Amdahl bookkeeping matters for Fig. 4.
+    """
+
+    name: str
+    flops: float
+    inputs: Tuple[str, ...]
+    outputs: Tuple[DataItem, ...]
+    parallel_fraction: float = 1.0
+    fn: Optional[Callable] = None  # the actual jittable callable, if bound
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedComputation:
+    """An ordered pipeline of stages with serial dependencies.
+
+    ``results`` are item names that must reside at CLIENT when the pipeline
+    finishes (the tracker must hand h_{t+1} back to the acquisition loop —
+    paper Fig. 3 category A)."""
+
+    name: str
+    sources: Tuple[DataItem, ...]
+    stages: Tuple[Stage, ...]
+    results: Tuple[str, ...]
+
+    def item_table(self) -> Dict[str, DataItem]:
+        table: Dict[str, DataItem] = {i.name: i for i in self.sources}
+        for s in self.stages:
+            for o in s.outputs:
+                table[o.name] = o
+        return table
+
+    def validate(self) -> None:
+        known = {i.name for i in self.sources}
+        for s in self.stages:
+            for inp in s.inputs:
+                if inp not in known:
+                    raise ValueError(
+                        f"stage {s.name!r} consumes unknown item {inp!r}"
+                    )
+            for o in s.outputs:
+                known.add(o.name)
+        for r in self.results:
+            if r not in known:
+                raise ValueError(f"result item {r!r} never produced")
+
+    def fused(self, fused_name: str = "single_step") -> "StagedComputation":
+        """Single-Step variant: all stages fused into one offloadable unit.
+
+        Intermediate items disappear from the network-visible surface —
+        exactly why the paper's Single-Step beats Multi-Step: only the
+        sources go up and only the results come down."""
+        self.validate()
+        table = self.item_table()
+        total_flops = sum(s.flops for s in self.stages)
+        wsum = sum(s.flops * s.parallel_fraction for s in self.stages)
+        pfrac = wsum / total_flops if total_flops else 1.0
+        outputs = tuple(table[r] for r in self.results)
+        src_names = tuple(i.name for i in self.sources)
+        fused_stage = Stage(
+            name=fused_name,
+            flops=total_flops,
+            inputs=src_names,
+            outputs=outputs,
+            parallel_fraction=pfrac,
+        )
+        return StagedComputation(
+            name=f"{self.name}[fused]",
+            sources=self.sources,
+            stages=(fused_stage,),
+            results=self.results,
+        )
+
+    def total_flops(self) -> float:
+        return sum(s.flops for s in self.stages)
+
+
+def pytree_nbytes(tree) -> int:
+    """Byte size of a pytree of arrays/ShapeDtypeStructs — used to annotate
+    stage boundaries from real jaxpr signatures."""
+    import jax
+    import numpy as np
+
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        shape = getattr(leaf, "shape", ())
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            total += 8
+        else:
+            total += int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+    return total
+
+
+def flops_of_jaxpr(fn: Callable, *args) -> float:
+    """Estimate FLOPs of ``fn(*args)`` via XLA's cost analysis on a CPU
+    lowering. Used to annotate stages from their real implementations
+    instead of hand-counted constants."""
+    import jax
+
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # older jax returns [dict]
+            cost = cost[0]
+        return float(cost.get("flops", 0.0))
+    except Exception:
+        return 0.0

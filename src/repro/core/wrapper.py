@@ -1,0 +1,83 @@
+"""Container ("wrapper") overhead — the JNI/JVM analogue (paper Fig. 4).
+
+The paper wraps the native C++ tracker in a Java container via JNI and
+finds the wrapper overhead "is not negligible, and it considerably reduced
+the performance": data serialization, synchronization and JVM costs taxed
+every call, hurting the fast server proportionally more than the slow
+laptop.
+
+The JAX-land analogue of that per-call marshalling tax is host<->device
+staging: flattening a pytree, converting dtypes, and crossing the
+host/device boundary outside of jit. This module *measures* that tax on
+the running host and produces a calibrated ``WrapperModel`` for the
+offload cost model, so Fig. 4's overhead study is grounded in a real
+measurement rather than an invented constant.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.offload import WrapperModel
+
+
+def _roundtrip_once(arr: np.ndarray) -> float:
+    """One host->device->host staging round trip, seconds."""
+    t0 = time.perf_counter()
+    dev = jax.device_put(arr)
+    dev.block_until_ready()
+    out = np.asarray(dev)
+    t1 = time.perf_counter()
+    del out
+    return t1 - t0
+
+
+def measure_wrapper(
+    small_bytes: int = 1024,
+    large_bytes: int = 4 << 20,
+    repeats: int = 5,
+) -> WrapperModel:
+    """Fit (call_overhead, serialization_bandwidth) from two staging sizes.
+
+    time(n) ~= call_overhead + n / bw  — solve from the small/large pair,
+    taking the min over repeats to strip scheduler noise.
+    """
+    small = np.zeros(small_bytes // 4, dtype=np.float32)
+    large = np.zeros(large_bytes // 4, dtype=np.float32)
+    # warmup
+    _roundtrip_once(small)
+    _roundtrip_once(large)
+    t_small = min(_roundtrip_once(small) for _ in range(repeats))
+    t_large = min(_roundtrip_once(large) for _ in range(repeats))
+    dt = max(t_large - t_small, 1e-9)
+    bw = (large_bytes - small_bytes) / dt
+    overhead = max(t_small - small_bytes / bw, 1e-6)
+    return WrapperModel(call_overhead=overhead, serialization_bandwidth=bw)
+
+
+def paper_wrapper() -> WrapperModel:
+    """The Java/JNI wrapper constants calibrated against the paper's own
+    Fig. 4/5 numbers (see benchmarks/calibrate.py for the derivation):
+
+    * server native ~42 fps (23.8 ms) vs wrapped ~30 fps (33 ms) =>
+      ~9 ms/frame single-step wrapper tax, mostly fixed + frame staging.
+    * Multi-Step visibly worse than Single-Step => a per-call fixed cost
+      of a few ms (JNI transition + JVM sync), times 4 calls.
+    * Forced+Single-Step+Ethernet ~= 10 fps with ~24 ms of server compute
+      => ~65 ms of per-frame container cost for a 537 KB RGBD frame
+      crossing twice through Java object streams: ~20 MB/s effective —
+      consistent with 2018-era JVM serialization of non-primitive buffers.
+    * Fig. 4's *local* wrapped runs only cross JNI (pinned buffers):
+      ~60 MB/s effective including synchronization — visible on the fast
+      server, "much less evident" on the slow laptop, as the paper finds.
+    """
+    return WrapperModel(
+        call_overhead=2.0e-3,
+        serialization_bandwidth=20e6,
+        jni_bandwidth=60e6,
+    )

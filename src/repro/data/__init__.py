@@ -1,0 +1,3 @@
+"""Data pipelines: synthetic RGBD sequences + LM token streams."""
+
+from repro.data import rgbd, tokens  # noqa: F401

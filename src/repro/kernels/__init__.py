@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's GPGPU hot spots.
+
+* ``render_score`` — fused particle render + E_D scoring (the population
+  evaluation the paper offloads). ``ops`` is the jit'd wrapper, ``ref``
+  the pure-jnp oracle.
+* ``pso_update`` — fused Clerc-Kennedy swarm velocity/position update
+  (``pso_ref`` oracle).
+
+Both validate under interpret=True on this CPU container and target TPU
+VMEM tiling via explicit BlockSpecs.
+"""

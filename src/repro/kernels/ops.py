@@ -1,0 +1,75 @@
+"""Jit'd public wrapper around the render_score Pallas kernel.
+
+Handles shape padding (particles to block_n, pixels to block_p), mask
+normalization, and the interpret-mode switch. This is the drop-in
+replacement for ``objective.batched_objective``'s vmapped evaluation —
+the tracker selects it with ``TrackerConfig(use_kernel=True)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.objective import CLAMP_T
+from repro.kernels import render_score as _kernel
+
+DEFAULT_INTERPRET = True  # CPU container; flip on real TPU.
+
+
+def _pad_to(x: jnp.ndarray, size: int, axis: int, value=0.0) -> jnp.ndarray:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_n", "block_p", "clamp_t", "interpret"),
+)
+def render_score(
+    spheres: jnp.ndarray,  # (N, S, 4)
+    rays: jnp.ndarray,  # (P, 3)
+    depth_obs: jnp.ndarray,  # (P,)
+    mask: jnp.ndarray,  # (P,)
+    *,
+    block_n: int = _kernel.DEFAULT_BLOCK_N,
+    block_p: int = _kernel.DEFAULT_BLOCK_P,
+    clamp_t: float = CLAMP_T,
+    interpret: bool = DEFAULT_INTERPRET,
+) -> jnp.ndarray:
+    """Normalized E_D per particle, shape (N,). Matches ref.render_score."""
+    n, s, _ = spheres.shape
+    p = rays.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    p_pad = -(-p // block_p) * block_p
+
+    spheres_p = _pad_to(spheres, n_pad, axis=0)
+    # Padding rays must be well-formed directions (d_z = 1) so the kernel
+    # never divides by |d|^2 = 0; their mask is 0 so they contribute
+    # nothing to the score.
+    if p_pad != p:
+        pad_rays = jnp.zeros((p_pad - p, 3), dtype=rays.dtype).at[:, 2].set(1.0)
+        rays_p = jnp.concatenate([rays, pad_rays], axis=0)
+    else:
+        rays_p = rays
+    depth_p = _pad_to(depth_obs, p_pad, axis=0)
+    mask_p = _pad_to(mask.astype(jnp.float32), p_pad, axis=0)
+
+    sums = _kernel.render_score_sums(
+        spheres_p,
+        rays_p,
+        depth_p,
+        mask_p,
+        block_n=block_n,
+        block_p=block_p,
+        clamp_t=clamp_t,
+        interpret=interpret,
+    )[:n]
+    denom = jnp.maximum(jnp.sum(mask.astype(jnp.float32)), 1.0)
+    return sums / denom

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the pso_update kernel (mirrors pso.swarm_step's
+velocity/position math exactly)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pso_update(
+    x, v, pbest, gbest, r1, r2, lo, hi,
+    *, inertia: float, cognitive: float, social: float, velocity_clip: float,
+):
+    x = x.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    vel = (
+        inertia * v
+        + cognitive * r1.astype(jnp.float32) * (pbest.astype(jnp.float32) - x)
+        + social * r2.astype(jnp.float32) * (gbest[None].astype(jnp.float32) - x)
+    )
+    vmax = velocity_clip * (hi - lo)
+    vel = jnp.clip(vel, -vmax[None], vmax[None])
+    pos = jnp.clip(x + vel, lo[None], hi[None])
+    return pos, vel

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused PSO swarm update (velocity + position).
+
+The second GPGPU component of the paper's per-frame loop (the first —
+population evaluation — is kernels/render_score.py): the Clerc–Kennedy
+update
+
+    v' = w v + c1 r1 (pbest - x) + c2 r2 (gbest - x)
+    v' = clip(v', -vclip*span, +vclip*span)
+    x' = clip(x + v', lo, hi)
+
+is pure elementwise VPU math over the (particles, dims) plane. Fusing it
+keeps the whole swarm state in VMEM for one pass instead of ~8 HBM
+round-trips of (N, D) intermediates.
+
+Tiling: grid over particle tiles; each step loads (BN, D) blocks of
+x/v/pbest/r1/r2 plus the broadcast (D,) rows (gbest, lo, hi). D = 27 is
+padded to 32 by ops.py — within a lane-width of the (8, 128) vector
+registers at the particle counts PSO uses.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 8
+
+
+def _pso_update_kernel(
+    x_ref, v_ref, pb_ref, r1_ref, r2_ref,  # (BN, D)
+    gb_ref, lo_ref, hi_ref,  # (1, D) broadcast rows
+    x_out_ref, v_out_ref,  # (BN, D)
+    *,
+    inertia: float,
+    cognitive: float,
+    social: float,
+    velocity_clip: float,
+):
+    x = x_ref[...]
+    v = v_ref[...]
+    pb = pb_ref[...]
+    r1 = r1_ref[...]
+    r2 = r2_ref[...]
+    gb = gb_ref[...]  # (1, D) broadcasts over particles
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+
+    vel = (
+        inertia * v
+        + cognitive * r1 * (pb - x)
+        + social * r2 * (gb - x)
+    )
+    vmax = velocity_clip * (hi - lo)
+    vel = jnp.clip(vel, -vmax, vmax)
+    pos = jnp.clip(x + vel, lo, hi)
+    x_out_ref[...] = pos
+    v_out_ref[...] = vel
+
+
+def pso_update(
+    x: jnp.ndarray,  # (N, D) padded: N % block_n == 0
+    v: jnp.ndarray,
+    pbest: jnp.ndarray,
+    gbest: jnp.ndarray,  # (D,)
+    r1: jnp.ndarray,
+    r2: jnp.ndarray,
+    lo: jnp.ndarray,  # (D,)
+    hi: jnp.ndarray,
+    *,
+    inertia: float,
+    cognitive: float,
+    social: float,
+    velocity_clip: float,
+    block_n: int = DEFAULT_BLOCK_N,
+    interpret: bool = True,
+):
+    """Returns (new_positions, new_velocities), both (N, D) f32."""
+    n, d = x.shape
+    assert n % block_n == 0, (n, block_n)
+    kernel = functools.partial(
+        _pso_update_kernel,
+        inertia=inertia,
+        cognitive=cognitive,
+        social=social,
+        velocity_clip=velocity_clip,
+    )
+    row = lambda a: a.reshape(1, d).astype(jnp.float32)
+    grid = (n // block_n,)
+    tile = pl.BlockSpec((block_n, d), lambda i: (i, 0))
+    brow = pl.BlockSpec((1, d), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tile, tile, tile, tile, tile, brow, brow, brow],
+        out_specs=[tile, tile],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        x.astype(jnp.float32), v.astype(jnp.float32),
+        pbest.astype(jnp.float32), r1.astype(jnp.float32),
+        r2.astype(jnp.float32), row(gbest), row(lo), row(hi),
+    )

@@ -1,0 +1,134 @@
+"""Pallas TPU kernel: fused particle-population render + E_D scoring.
+
+This is the GPGPU hot spot the paper offloads: evaluating the PSO
+population means rendering every particle's hand hypothesis to a depth
+map and scoring it against the observation (Eq. 2). On CUDA the original
+tracker rasterizes primitive meshes; on TPU we compute analytic sphere
+depth per (particle, pixel, primitive) — dense FMA math with two
+reductions (min over primitives, masked-sum over pixels), ideal for the
+VPU/MXU with no scatter or z-buffer contention (DESIGN.md §2).
+
+Tiling: grid = (N/BN particle tiles, P/BP pixel tiles). Each step loads
+one particle tile's packed spheres (BN, S, 4), one pixel tile's rays
+(BP, 3), observed depth and bbox mask (BP,), renders the (BN, BP) depth
+tile via a min over S spheres, and accumulates the masked clamped-L1
+partial sums into the output block (BN,) across the pixel-tile grid axis
+(j == 0 initializes, j > 0 accumulates — the canonical Pallas reduction
+pattern).
+
+VMEM budget at the default BN=8, BP=512, S=48, f32:
+  spheres 8*48*4*4 B = 6 KiB, rays/depth/mask ~ 10 KiB,
+  (BN, BP, S) intermediates ~= 3 * 8*512*48*4 B = 2.25 MiB  << 16 MiB.
+The (BP, 3) x (BN*S, 3)^T dot-product is a skinny matmul; the bulk of the
+work is VPU elementwise math over the (BN, BP, S) block, whose trailing
+(BP, S) = (512, 48) axes map onto the (8, 128) vector lanes cleanly
+(512 = 4*128, 48 = 6*8).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.camera import BACKGROUND_DEPTH
+from repro.core.objective import CLAMP_T
+
+DEFAULT_BLOCK_N = 8
+DEFAULT_BLOCK_P = 512
+
+
+def _render_score_kernel(
+    spheres_ref,  # (BN, S, 4) f32
+    rays_ref,  # (BP, 3) f32
+    depth_ref,  # (BP,) f32
+    mask_ref,  # (BP,) f32 (0/1)
+    out_ref,  # (BN,) f32 — masked clamped-L1 partial sums
+    *,
+    clamp_t: float,
+    background: float,
+):
+    j = pl.program_id(1)
+
+    spheres = spheres_ref[...]
+    rays = rays_ref[...]
+    d_o = depth_ref[...]
+    msk = mask_ref[...]
+
+    c = spheres[:, :, :3]  # (BN, S, 3)
+    r = spheres[:, :, 3]  # (BN, S)
+
+    d2 = jnp.sum(rays * rays, axis=-1)  # (BP,)
+    # dc[n, p, s] = <ray_p, center_{n,s}>  — skinny matmul on the MXU.
+    dc = jax.lax.dot_general(
+        rays,
+        c,
+        dimension_numbers=(((1,), (2,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (BP, BN, S)
+    dc = jnp.transpose(dc, (1, 0, 2))  # (BN, BP, S)
+
+    c2r2 = jnp.sum(c * c, axis=-1) - r * r  # (BN, S)
+    disc = dc * dc - d2[None, :, None] * c2r2[:, None, :]  # (BN, BP, S)
+    t = (dc - jnp.sqrt(jnp.maximum(disc, 0.0))) / d2[None, :, None]
+    hit = (disc >= 0.0) & (t > 1e-4)
+    t = jnp.where(hit, t, background)
+    d_h = jnp.min(t, axis=-1)  # (BN, BP)
+
+    err = jnp.minimum(jnp.abs(d_h - d_o[None, :]), clamp_t)
+    partial = jnp.sum(err * msk[None, :], axis=-1)  # (BN,)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial
+
+
+def render_score_sums(
+    spheres: jnp.ndarray,  # (N, S, 4)
+    rays: jnp.ndarray,  # (P, 3)
+    depth_obs: jnp.ndarray,  # (P,)
+    mask: jnp.ndarray,  # (P,) float32 or bool
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_p: int = DEFAULT_BLOCK_P,
+    clamp_t: float = CLAMP_T,
+    background: float = BACKGROUND_DEPTH,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Unnormalized masked score sums per particle, shape (N,).
+
+    Shapes must already be padded: N % block_n == 0, P % block_p == 0
+    (``ops.render_score`` handles padding/normalization).
+    ``interpret=True`` executes the kernel body in Python on CPU — this
+    container has no TPU; on real hardware pass ``interpret=False``.
+    """
+    n, s, _ = spheres.shape
+    p = rays.shape[0]
+    assert n % block_n == 0, (n, block_n)
+    assert p % block_p == 0, (p, block_p)
+    mask = mask.astype(jnp.float32)
+
+    grid = (n // block_n, p // block_p)
+    kernel = functools.partial(
+        _render_score_kernel, clamp_t=clamp_t, background=background
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, s, 4), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((block_p, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_p,), lambda i, j: (j,)),
+            pl.BlockSpec((block_p,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(spheres.astype(jnp.float32), rays.astype(jnp.float32),
+      depth_obs.astype(jnp.float32), mask)

@@ -1,0 +1,7 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers.
+
+NOTE: do not import repro.launch.dryrun from library code — it sets
+XLA_FLAGS at import time (512 placeholder devices) by design.
+"""
+
+from repro.launch import mesh  # noqa: F401

@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+The two lines above MUST stay the first statements of this module (before
+any jax import, direct or transitive): jax locks the device count at
+first initialization, and the production meshes need 512 placeholder host
+devices. Smoke tests and benchmarks do NOT import this module and see the
+real single CPU device.
+
+For each combination this script:
+  1. builds the step function (train_step / prefill / serve_step per the
+     shape's kind) with the sharding rules of sharding/specs.py,
+  2. ``jax.jit(...).lower(**ShapeDtypeStructs).compile()`` under the
+     production mesh — no arrays are ever materialized,
+  3. records memory_analysis() (fits-per-chip proof), cost_analysis()
+     (FLOPs / bytes) and the collective-byte census parsed from the
+     optimized HLO (repro.roofline.analysis),
+  4. writes one JSON per combo under experiments/dryrun/ (resumable).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out DIR] [--force]
+"""
+
+import argparse
+import functools
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry, shapes as shp
+from repro.configs.base import ArchConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer
+from repro.optim import adamw
+from repro.roofline import analysis
+from repro.sharding import specs as sspecs
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def build_train(cfg: ArchConfig, shape, mesh):
+    opt_cfg = adamw.AdamWConfig()
+    shard = sspecs.make_shard_fn(mesh)
+
+    def train_step(params, opt_state, batch):
+        def loss_wrap(p):
+            loss, metrics = transformer.loss_fn(
+                cfg, p, batch, shard=shard, remat=True
+            )
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(loss_wrap, has_aux=True)(
+            params
+        )
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_opt, metrics
+
+    params_sds = transformer.param_shapes(cfg)
+    opt_sds = jax.eval_shape(adamw.init, params_sds)
+    batch_sds = shp.token_inputs(cfg, shape)
+
+    p_specs = sspecs.param_specs(params_sds, mesh)
+    # §Perf iteration 4: REPRO_ZERO1=1 shards AdamW moments over the data
+    # axes (ZeRO-1) — replicated f32 moments otherwise dominate HBM.
+    if os.environ.get("REPRO_ZERO1") == "1":
+        m_specs = sspecs.zero1_specs(p_specs, params_sds, mesh)
+    else:
+        m_specs = p_specs
+    o_specs = adamw.AdamWState(
+        step=jax.sharding.PartitionSpec(),
+        mu=m_specs,
+        nu=m_specs,
+    )
+    b_specs = sspecs.input_specs_tree(batch_sds, mesh)
+    in_shardings = (
+        sspecs.named(p_specs, mesh),
+        sspecs.named(o_specs, mesh),
+        sspecs.named(b_specs, mesh),
+    )
+    fn = jax.jit(train_step, in_shardings=in_shardings, donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, batch_sds)
+
+
+def build_prefill(cfg: ArchConfig, shape, mesh):
+    shard = sspecs.make_shard_fn(mesh)
+    batch_sds = shp.token_inputs(cfg, shape)
+    max_len = shape.seq_len
+    if cfg.modality == "vision":
+        # the vision frontend prepends patch embeddings to the stream
+        max_len += cfg.frontend_tokens
+
+    def prefill_step(params, batch):
+        logits, cache = transformer.prefill(
+            cfg,
+            params,
+            batch["tokens"],
+            max_len=max_len,
+            positions=batch.get("positions"),
+            frontend_embeds=batch.get("frontend_embeds"),
+            encoder_tokens=batch.get("encoder_tokens"),
+            shard=shard,
+        )
+        return logits, cache
+
+    params_sds = transformer.param_shapes(cfg)
+    p_specs = sspecs.param_specs(params_sds, mesh)
+    b_specs = sspecs.input_specs_tree(batch_sds, mesh)
+    fn = jax.jit(
+        prefill_step,
+        in_shardings=(sspecs.named(p_specs, mesh), sspecs.named(b_specs, mesh)),
+    )
+    return fn, (params_sds, batch_sds)
+
+
+def build_decode(cfg: ArchConfig, shape, mesh):
+    shard = sspecs.make_shard_fn(mesh)
+    b = shape.global_batch
+    max_len = shape.seq_len
+    # §Perf iteration 3: REPRO_RING=1 switches sliding-window layers to
+    # ring-buffer caches of length `window` (gemma3 long_500k hillclimb).
+    ring = (
+        os.environ.get("REPRO_RING") == "1"
+        and cfg.num_heads > 0
+        and any(w > 0 for w in cfg.layer_window_sizes())
+    )
+
+    def serve_step(params, cache, batch):
+        return transformer.decode_step(
+            cfg,
+            params,
+            cache,
+            batch["tokens"],
+            positions=batch.get("positions") if cfg.mrope else None,
+            shard=shard,
+        )
+
+    params_sds = transformer.param_shapes(cfg)
+    cache_sds = transformer.cache_shapes(cfg, b, max_len, ring=ring)
+    batch_all = shp.token_inputs(cfg, shape)
+    batch_sds = {"tokens": batch_all["tokens"]}
+    if cfg.mrope:
+        batch_sds["positions"] = batch_all["positions"]
+
+    p_specs = sspecs.param_specs(params_sds, mesh)
+    c_specs = sspecs.cache_specs(cache_sds, mesh)
+    b_specs = sspecs.input_specs_tree(batch_sds, mesh)
+    fn = jax.jit(
+        serve_step,
+        in_shardings=(
+            sspecs.named(p_specs, mesh),
+            sspecs.named(c_specs, mesh),
+            sspecs.named(b_specs, mesh),
+        ),
+        donate_argnums=(1,),
+    )
+    return fn, (params_sds, cache_sds, batch_sds)
+
+
+def _memory_stats(compiled) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+        # bytes per chip = args + temps (aliased buffers subtracted once)
+        total = out.get("argument_size_in_bytes", 0) + out.get(
+            "temp_size_in_bytes", 0
+        ) - out.get("alias_size_in_bytes", 0)
+        out["bytes_per_chip"] = int(total)
+    except Exception as e:  # CPU backend may not implement everything
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_stats(compiled) -> Dict[str, float]:
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        return {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+    except Exception as e:
+        return {"error_": 0.0}
+
+
+def run_one(
+    arch: str, shape_name: str, multi_pod: bool, out_dir: str, force: bool = False
+) -> Dict[str, Any]:
+    cfg = registry.get(arch)
+    shape = shp.ALL_SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "status": "skipped",
+    }
+    if not shp.applicable(cfg, shape):
+        record["reason"] = "long_500k skipped: pure full-attention arch"
+        _write(out_path, record)
+        return record
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        chips = int(len(mesh.devices.reshape(-1)))
+        with mesh:
+            if shape.kind == "train":
+                fn, args_sds = build_train(cfg, shape, mesh)
+            elif shape.kind == "prefill":
+                fn, args_sds = build_prefill(cfg, shape, mesh)
+            else:
+                fn, args_sds = build_decode(cfg, shape, mesh)
+            lowered = fn.lower(*args_sds)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            cost = _cost_stats(compiled)
+            mem = _memory_stats(compiled)
+            try:
+                hlo = compiled.as_text()
+            except Exception:
+                hlo = lowered.as_text()
+            report = analysis.analyze(
+                cfg, shape, mesh_name, chips, cost, hlo, mem
+            )
+        record.update(
+            status="ok",
+            chips=chips,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            cost=cost,
+            memory=mem,
+            roofline=report.row(),
+            hlo_bytes_len=len(hlo),
+        )
+    except Exception as e:
+        record.update(status="error", error=repr(e), trace=traceback.format_exc())
+    record["elapsed_s"] = round(time.time() - t0, 2)
+    _write(out_path, record)
+    return record
+
+
+def _write(path: str, record: Dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else registry.list_archs()
+    shape_names = [args.shape] if args.shape else list(shp.ALL_SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    n_ok = n_err = n_skip = 0
+    for arch in archs:
+        for shape_name in shape_names:
+            for multi in meshes:
+                rec = run_one(arch, shape_name, multi, args.out, args.force)
+                tag = rec["status"]
+                if tag == "ok":
+                    n_ok += 1
+                    r = rec["roofline"]
+                    print(
+                        f"OK   {arch:22s} {shape_name:12s} {rec['mesh']:10s} "
+                        f"compile={rec.get('compile_s', 0):7.1f}s "
+                        f"dom={r['dominant']:10s} "
+                        f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+                        f"n={r['collective_s']:.2e}",
+                        flush=True,
+                    )
+                elif tag == "skipped":
+                    n_skip += 1
+                    print(f"SKIP {arch:22s} {shape_name:12s} {rec['mesh']}", flush=True)
+                else:
+                    n_err += 1
+                    print(
+                        f"ERR  {arch:22s} {shape_name:12s} {rec['mesh']}: "
+                        f"{rec['error'][:200]}",
+                        flush=True,
+                    )
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Serving driver: batched generation on live devices.
+
+Usage (reduced config on CPU):
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
+      --requests 8 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.serving.engine import Engine, Request
+
+
+def run(
+    arch: str,
+    reduced: bool = True,
+    num_requests: int = 8,
+    prompt_len: int = 32,
+    max_new: int = 32,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    cfg = registry.get(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    key = jax.random.PRNGKey(seed)
+    params = transformer.init_params(cfg, key)
+    rng = np.random.default_rng(seed)
+    requests = [
+        Request(
+            uid=i,
+            prompt=rng.integers(0, cfg.vocab_size, size=prompt_len).astype(
+                np.int32
+            ),
+            max_new_tokens=max_new,
+        )
+        for i in range(num_requests)
+    ]
+    engine = Engine(cfg, params, max_len=prompt_len + max_new + 8,
+                    temperature=temperature, seed=seed)
+    t0 = time.time()
+    completions = engine.generate(requests)
+    dt = time.time() - t0
+    total_new = sum(len(c.tokens) for c in completions)
+    return {
+        "arch": cfg.name,
+        "requests": num_requests,
+        "new_tokens": total_new,
+        "seconds": dt,
+        "tokens_per_second": total_new / dt,
+        "sample": completions[0].tokens[:16].tolist(),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.list_archs())
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+    out = run(
+        args.arch,
+        num_requests=args.requests,
+        prompt_len=args.prompt_len,
+        max_new=args.max_new,
+        temperature=args.temperature,
+    )
+    print(json.dumps(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""Training driver.
+
+Runs real steps on whatever devices exist (CPU smoke / reduced configs,
+or a real TPU slice with the production mesh). The dry-run path for the
+assigned full configs lives in launch/dryrun.py.
+
+Usage (end-to-end example, ~100M model, a few hundred steps):
+  PYTHONPATH=src python -m repro.launch.train --arch gemma-2b --reduced \
+      --steps 300 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+from repro.configs import registry
+from repro.data.tokens import TokenPipeline, TokenPipelineConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.optim import adamw
+from repro.sharding import specs as sspecs
+
+
+def build_train_step(cfg, opt_cfg, mesh, schedule):
+    shard = sspecs.make_shard_fn(mesh) if mesh is not None else transformer._no_shard
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: transformer.loss_fn(cfg, p, batch, shard=shard, remat=True),
+            has_aux=True,
+        )(params)
+        lr_scale = schedule(opt_state.step)
+        params, opt_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params, lr_scale
+        )
+        return params, opt_state, dict(metrics, loss=loss, **opt_metrics)
+
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+def run(
+    arch: str,
+    steps: int = 300,
+    batch: int = 8,
+    seq: int = 256,
+    reduced: bool = True,
+    lr: float = 3e-4,
+    seed: int = 0,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 100,
+    log_every: int = 10,
+    big: bool = False,
+) -> Dict:
+    cfg = registry.get(arch)
+    if reduced:
+        cfg = cfg.reduced()
+        if big:
+            # ~100M-class variant for real accelerator hosts
+            cfg = dataclasses.replace(
+                cfg,
+                num_layers=12,
+                d_model=768,
+                num_heads=12 if cfg.num_heads else 0,
+                num_kv_heads=4 if cfg.num_heads else 0,
+                head_dim=64 if cfg.num_heads else 0,
+                d_ff=3072 if cfg.d_ff else 0,
+                vocab_size=32768,
+                max_seq_len=max(cfg.max_seq_len, seq),
+            )
+        else:
+            cfg = dataclasses.replace(
+                cfg,
+                num_layers=max(cfg.num_layers, 4),
+                d_model=max(cfg.d_model, 512) if cfg.d_model < 512 else cfg.d_model,
+                vocab_size=max(cfg.vocab_size, 8192),
+                max_seq_len=max(cfg.max_seq_len, seq),
+            )
+    key = jax.random.PRNGKey(seed)
+    params = transformer.init_params(cfg, key)
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+    opt_cfg = adamw.AdamWConfig(lr=lr)
+    opt_state = adamw.init(params)
+    schedule = adamw.cosine_schedule(steps)
+    step_fn = build_train_step(cfg, opt_cfg, None, schedule)
+
+    pipe = iter(
+        TokenPipeline(
+            TokenPipelineConfig(
+                vocab_size=cfg.vocab_size,
+                seq_len=seq,
+                global_batch=batch,
+                seed=seed,
+            )
+        )
+    )
+
+    losses = []
+    t0 = time.time()
+    for step in range(steps):
+        host_batch = next(pipe)
+        batch_dev = {k: jnp.asarray(v) for k, v in host_batch.items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch_dev)
+        if step % log_every == 0 or step == steps - 1:
+            loss = float(metrics["loss"])
+            losses.append((step, loss))
+            tps = batch * seq * (step + 1) / (time.time() - t0)
+            print(
+                f"step {step:5d} loss {loss:7.4f} "
+                f"grad_norm {float(metrics['grad_norm']):8.3f} tok/s {tps:9.0f}",
+                flush=True,
+            )
+        if ckpt_dir and step and step % ckpt_every == 0:
+            ckpt_io.save(ckpt_dir, step, {"params": params})
+
+    first_loss, last_loss = losses[0][1], losses[-1][1]
+    result = {
+        "arch": cfg.name,
+        "params": n_params,
+        "steps": steps,
+        "first_loss": first_loss,
+        "final_loss": last_loss,
+        "improved": last_loss < first_loss - 0.2,
+        "losses": losses,
+    }
+    if ckpt_dir:
+        ckpt_io.save(ckpt_dir, steps, {"params": params})
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=registry.list_archs())
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run(
+        args.arch,
+        steps=args.steps,
+        batch=args.batch,
+        seq=args.seq,
+        lr=args.lr,
+        reduced=args.reduced,
+        ckpt_dir=args.ckpt_dir,
+    )
+    print(json.dumps({k: v for k, v in result.items() if k != "losses"}))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Model substrate: layers, attention, SSM, MoE, transformer assembly."""
+
+from repro.models import attention, layers, moe, multimodal, ssm, transformer  # noqa: F401

@@ -1,0 +1,547 @@
+"""Attention: GQA/MQA, sliding windows, MLA, cross-attention, KV caches.
+
+Three execution paths:
+
+* ``attend_chunked`` — train/prefill. Memory-bounded online-softmax
+  attention (a pure-JAX flash-attention analogue): lax.scan over query
+  chunks with an inner scan over KV chunks carrying (max, denom, acc).
+  Never materializes an (S, S) score matrix — prefill_32k would need
+  4.3 GB per (batch, head) otherwise.
+* ``attend_decode`` — serve_step. One query against a full cache; linear
+  in cache length.
+* MLA (MiniCPM3) — latent-compressed KV. Prefill materializes k/v from
+  the latent; decode uses the *absorbed* form (W_uk folded into the
+  query, W_uv folded into the output) so the cache holds only the 256-d
+  latent + 32-d decoupled RoPE key per token.
+
+Window masking is data-driven: ``window`` arrives as a traced int32 so a
+single scanned layer graph serves both local and global layers (gemma3's
+5:1 pattern) — window == 0 means full/global attention.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MLAConfig
+from repro.models import layers
+
+NEG_INF = -2.0e38
+
+# §Perf iteration 5: cast softmax probabilities to bf16 before the PV
+# matmul (f32 accumulation preserved via preferred_element_type). Halves
+# the traffic of the largest chunked-attention intermediate; enabled by
+# REPRO_BF16_ATTN=1 so baseline/optimized dry-runs stay distinguishable.
+import os as _os
+BF16_PROBS = _os.environ.get("REPRO_BF16_ATTN") == "1"
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    if cfg.attention == "mla":
+        m = cfg.mla
+        k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+        qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "w_dq": layers._dense_init(k1, (d, m.q_lora_rank), dtype),
+            "q_norm": layers.init_rmsnorm(m.q_lora_rank, dtype),
+            "w_uq": layers._dense_init(k2, (m.q_lora_rank, h * qk_head), dtype),
+            "w_dkv": layers._dense_init(
+                k3, (d, m.kv_lora_rank + m.qk_rope_head_dim), dtype
+            ),
+            "kv_norm": layers.init_rmsnorm(m.kv_lora_rank, dtype),
+            "w_uk": layers._dense_init(
+                k4, (m.kv_lora_rank, h * m.qk_nope_head_dim), dtype
+            ),
+            "w_uv": layers._dense_init(
+                k5, (m.kv_lora_rank, h * m.v_head_dim), dtype
+            ),
+            "w_o": layers._dense_init(k6, (h * m.v_head_dim, d), dtype),
+        }
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "w_q": layers._dense_init(k1, (d, h * hd), dtype),
+        "w_k": layers._dense_init(k2, (d, kv * hd), dtype),
+        "w_v": layers._dense_init(k3, (d, kv * hd), dtype),
+        "w_o": layers._dense_init(k4, (h * hd, d), dtype),
+    }
+
+
+def init_cross_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    return init_attention(key, cfg, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-style) attention — train/prefill
+# ---------------------------------------------------------------------------
+
+
+def _window_mask(
+    q_pos: jnp.ndarray, k_pos: jnp.ndarray, window, causal: bool
+) -> jnp.ndarray:
+    """(Q, K) boolean mask. window: traced int32, 0 => no window."""
+    q = q_pos[:, None]
+    k = k_pos[None, :]
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= k <= q
+    win = jnp.asarray(window, jnp.int32)
+    mask &= (win == 0) | (q - k < win)
+    return mask
+
+
+class _SoftmaxCarry(NamedTuple):
+    m: jnp.ndarray  # running max      (B, H, Qc)
+    denom: jnp.ndarray  # running sum  (B, H, Qc)
+    acc: jnp.ndarray  # weighted accum (B, H, Qc, D)
+
+
+def attend_chunked(
+    q: jnp.ndarray,  # (B, S, H, D)
+    k: jnp.ndarray,  # (B, T, KV, D)
+    v: jnp.ndarray,  # (B, T, KV, D)
+    *,
+    q_positions: jnp.ndarray,  # (S,)
+    k_positions: jnp.ndarray,  # (T,)
+    window=0,
+    causal: bool = True,
+    q_chunk: int = 512,
+    k_chunk: int = 1024,
+    softcap_val: float = 0.0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Online-softmax attention, O(q_chunk * k_chunk) live score memory.
+    Supports distinct k and v head dims (MLA)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    dv = v.shape[3]
+    assert h % kvh == 0
+    groups = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+
+    q_chunk = min(q_chunk, s)
+    k_chunk = min(k_chunk, t)
+    # pad S/T to chunk multiples
+    s_pad = -(-s // q_chunk) * q_chunk
+    t_pad = -(-t // k_chunk) * k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, t_pad - t), (0, 0), (0, 0)))
+    qpos = jnp.pad(q_positions, (0, s_pad - s), constant_values=-1)
+    kpos = jnp.pad(k_positions, (0, t_pad - t), constant_values=2**30)
+
+    nq, nk = s_pad // q_chunk, t_pad // k_chunk
+    # (nq, B, Qc, H, D) etc.
+    q_ch = jnp.moveaxis(qp.reshape(b, nq, q_chunk, h, d), 1, 0)
+    k_ch = jnp.moveaxis(kp.reshape(b, nk, k_chunk, kvh, d), 1, 0)
+    v_ch = jnp.moveaxis(vp.reshape(b, nk, k_chunk, kvh, dv), 1, 0)
+    qpos_ch = qpos.reshape(nq, q_chunk)
+    kpos_ch = kpos.reshape(nk, k_chunk)
+
+    def q_step(_, q_in):
+        q_blk, qpos_blk = q_in  # (B, Qc, H, D), (Qc,)
+
+        def kv_step(carry: _SoftmaxCarry, kv_in):
+            k_blk, v_blk, kpos_blk = kv_in
+            # scores: (B, H, Qc, Kc) via GQA head grouping
+            qg = q_blk.reshape(b, q_chunk, kvh, groups, d)
+            scores = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+            ) * scale
+            scores = layers.softcap(scores, softcap_val)
+            mask = _window_mask(qpos_blk, kpos_blk, window, causal)
+            scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+            m_new = jnp.maximum(
+                carry.m, jnp.max(scores, axis=-1).reshape(b, h, q_chunk)
+            )
+            alpha = jnp.exp(carry.m - m_new)
+            p = jnp.exp(
+                scores - m_new.reshape(b, kvh, groups, q_chunk)[..., None]
+            )
+            denom = carry.denom * alpha + jnp.sum(p, axis=-1).reshape(
+                b, h, q_chunk
+            )
+            if BF16_PROBS:
+                pv = jax.lax.dot_general(
+                    p.astype(jnp.bfloat16),
+                    v_blk.astype(jnp.bfloat16),
+                    dimension_numbers=((((4,), (1,))), (((0, 1)), ((0, 2)))),
+                    preferred_element_type=jnp.float32,
+                )  # (B, KVH, G, Qc, Dv)
+                pv = pv.reshape(b, h, q_chunk, dv)
+            else:
+                pv = jnp.einsum(
+                    "bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32)
+                ).reshape(b, h, q_chunk, dv)
+            acc = carry.acc * alpha[..., None] + pv
+            return _SoftmaxCarry(m_new, denom, acc), None
+
+        init = _SoftmaxCarry(
+            m=jnp.full((b, h, q_chunk), NEG_INF, jnp.float32),
+            denom=jnp.zeros((b, h, q_chunk), jnp.float32),
+            acc=jnp.zeros((b, h, q_chunk, dv), jnp.float32),
+        )
+        carry, _ = jax.lax.scan(kv_step, init, (k_ch, v_ch, kpos_ch))
+        out = carry.acc / jnp.maximum(carry.denom[..., None], 1e-30)
+        return None, out  # (B, H, Qc, D)
+
+    _, outs = jax.lax.scan(q_step, None, (q_ch, qpos_ch))
+    # (nq, B, H, Qc, Dv) -> (B, nq, Qc, H, Dv) -> (B, S, H, Dv)
+    out = jnp.moveaxis(outs, 0, 1).transpose(0, 1, 3, 2, 4)
+    out = out.reshape(b, s_pad, h, dv)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention — one token vs. cache
+# ---------------------------------------------------------------------------
+
+
+def attend_decode(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, T, KV, D)
+    v_cache: jnp.ndarray,  # (B, T, KV, D)
+    *,
+    position: jnp.ndarray,  # (B,) current position (cache index just written)
+    window=0,
+    softcap_val: float = 0.0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    b, _, h, d = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+
+    qg = q.reshape(b, kvh, groups, d)
+    scores = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    scores = layers.softcap(scores, softcap_val)
+    kpos = jnp.arange(t, dtype=jnp.int32)[None, :]  # (1, T)
+    pos = position.astype(jnp.int32)[:, None]
+    valid = kpos <= pos
+    win = jnp.asarray(window, jnp.int32)
+    valid &= (win == 0) | (pos - kpos < win)
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attend_decode_ring(
+    q: jnp.ndarray,  # (B, 1, H, D)
+    k_cache: jnp.ndarray,  # (B, T, KV, D) ring buffer, T == window
+    v_cache: jnp.ndarray,
+    *,
+    position: jnp.ndarray,  # (B,) absolute position just written
+    softcap_val: float = 0.0,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    """Decode attention over a ring buffer: every stored entry is inside
+    the window by construction; mask only unwritten warm-up slots."""
+    b, _, h, d = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kvh
+    scale = (d ** -0.5) if scale is None else scale
+    qg = q.reshape(b, kvh, groups, d)
+    scores = jnp.einsum(
+        "bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+        k_cache.astype(jnp.float32),
+    ) * scale
+    scores = layers.softcap(scores, softcap_val)
+    slots = jnp.arange(t, dtype=jnp.int32)[None, :]
+    pos = position.astype(jnp.int32)[:, None]
+    written = (slots <= pos) | (pos >= t)
+    scores = jnp.where(written[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA block apply (projections + rope + attention)
+# ---------------------------------------------------------------------------
+
+
+def gqa_forward(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, S, d_model)
+    positions: jnp.ndarray,  # (S,) or mrope (3, B, S)
+    window=0,
+    causal: bool = True,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> jnp.ndarray:
+    """Train/prefill attention. kv_override supplies encoder memory for
+    cross-attention (positions then index the memory)."""
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, s, h, hd)
+    if kv_override is None:
+        k = (x @ params["w_k"]).reshape(b, s, kvh, hd)
+        v = (x @ params["w_v"]).reshape(b, s, kvh, hd)
+        if cfg.mrope:
+            ang = layers.mrope_angles(
+                positions, hd, cfg.rope_theta, cfg.mrope_sections
+            )  # (B, S, hd//2)
+            q = layers.apply_rope(q, ang)
+            k = layers.apply_rope(k, ang)
+            qpos = positions[0, 0] if positions.ndim == 3 else positions
+        else:
+            ang = layers.rope_angles(positions, hd, cfg.rope_theta)
+            q = layers.apply_rope(q, ang)
+            k = layers.apply_rope(k, ang)
+            qpos = positions
+        kpos = qpos
+    else:
+        mem = kv_override[0]
+        t = mem.shape[1]
+        k = (mem @ params["w_k"]).reshape(b, t, kvh, hd)
+        v = (mem @ params["w_v"]).reshape(b, t, kvh, hd)
+        qpos = positions
+        kpos = jnp.arange(t, dtype=jnp.int32)
+        causal = False
+    out = attend_chunked(
+        q, k, v,
+        q_positions=qpos,
+        k_positions=kpos,
+        window=window,
+        causal=causal,
+        softcap_val=cfg.logit_softcap,
+    )
+    return out.reshape(b, s, h * hd) @ params["w_o"]
+
+
+def gqa_prefill_kv(
+    params: Dict, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K/V to store in the cache during prefill (rope already applied)."""
+    b, s, _ = x.shape
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    k = (x @ params["w_k"]).reshape(b, s, kvh, hd)
+    v = (x @ params["w_v"]).reshape(b, s, kvh, hd)
+    if cfg.mrope:
+        ang = layers.mrope_angles(positions, hd, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        ang = layers.rope_angles(positions, hd, cfg.rope_theta)
+    return layers.apply_rope(k, ang), v
+
+
+def gqa_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, 1, d_model)
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    position: jnp.ndarray,  # rope position: (B,) or mrope (3, B, 1)
+    window=0,
+    cache_pos: Optional[jnp.ndarray] = None,  # (B,) cache write index
+    ring: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step. Returns (out, new_k_cache, new_v_cache).
+
+    ``position`` drives the rotary embedding; ``cache_pos`` is the slot
+    the new KV is written to and the causal/window horizon. They differ
+    for M-RoPE (image patches share a temporal position but occupy
+    distinct cache slots); for text decode they coincide."""
+    b = x.shape[0]
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, 1, h, hd)
+    k = (x @ params["w_k"]).reshape(b, 1, kvh, hd)
+    v = (x @ params["w_v"]).reshape(b, 1, kvh, hd)
+    if cfg.mrope:
+        ang = layers.mrope_angles(
+            position, hd, cfg.rope_theta, cfg.mrope_sections
+        )  # (B, 1, hd//2)
+        pos_scalar = position[0, :, 0] if cache_pos is None else cache_pos
+    else:
+        ang = layers.rope_angles(position[:, None], hd, cfg.rope_theta)
+        pos_scalar = position if cache_pos is None else cache_pos
+    q = layers.apply_rope(q, ang)
+    k = layers.apply_rope(k, ang)
+    if ring:
+        # §Perf iteration 3: ring-buffer cache for sliding-window layers.
+        # The cache holds exactly the last T positions (T == window);
+        # contents are within-window by construction, so the only mask
+        # needed is the warm-up one (slots not yet written).
+        t_ring = k_cache.shape[1]
+        slot = pos_scalar % t_ring
+        k_cache = _cache_write(k_cache, k[:, 0], slot)
+        v_cache = _cache_write(v_cache, v[:, 0], slot)
+        out = attend_decode_ring(
+            q, k_cache, v_cache,
+            position=pos_scalar,
+            softcap_val=cfg.logit_softcap,
+        )
+    else:
+        # write at the cache slot (vmapped DUS over batch)
+        k_cache = _cache_write(k_cache, k[:, 0], pos_scalar)
+        v_cache = _cache_write(v_cache, v[:, 0], pos_scalar)
+        out = attend_decode(
+            q, k_cache, v_cache,
+            position=pos_scalar,
+            window=window,
+            softcap_val=cfg.logit_softcap,
+        )
+    return out.reshape(b, 1, h * hd) @ params["w_o"], k_cache, v_cache
+
+
+def _cache_write(cache: jnp.ndarray, new: jnp.ndarray, pos: jnp.ndarray):
+    """cache (B, T, ...) <- new (B, ...) at per-batch positions (B,)."""
+
+    def write_one(c, n, p):
+        return jax.lax.dynamic_update_slice(
+            c, n[None], (p,) + (0,) * (c.ndim - 1)
+        )
+
+    return jax.vmap(write_one)(cache, new, pos.astype(jnp.int32))
+
+
+def gqa_cross_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, 1, d)
+    mem_k: jnp.ndarray,  # precomputed encoder K (B, T, KV, D)
+    mem_v: jnp.ndarray,
+) -> jnp.ndarray:
+    b = x.shape[0]
+    h, hd = cfg.num_heads, cfg.resolved_head_dim
+    q = (x @ params["w_q"]).reshape(b, 1, h, hd)
+    t = mem_k.shape[1]
+    out = attend_decode(
+        q, mem_k, mem_v,
+        position=jnp.full((b,), t - 1, jnp.int32),  # all memory visible
+        window=0,
+        softcap_val=cfg.logit_softcap,
+    )
+    return out.reshape(b, 1, h * hd) @ params["w_o"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (Multi-head Latent Attention) — MiniCPM3
+# ---------------------------------------------------------------------------
+
+
+def mla_forward(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+) -> jnp.ndarray:
+    """Train/prefill MLA: materialize per-head k/v from the latent."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    q_lat = layers.rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (q_lat @ params["w_uq"]).reshape(b, s, h, qk_head)
+    q_nope, q_rope = (
+        q[..., : m.qk_nope_head_dim],
+        q[..., m.qk_nope_head_dim :],
+    )
+
+    dkv = x @ params["w_dkv"]  # (B, S, kv_lora + rope)
+    c_kv = layers.rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank])
+    k_rope = dkv[..., m.kv_lora_rank :][:, :, None]  # (B, S, 1, rope_dim)
+
+    ang = layers.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, ang)
+    k_rope = layers.apply_rope(k_rope, ang)
+
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, s, h, m.v_head_dim)
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (m.qk_rope_head_dim,))],
+        axis=-1,
+    )
+    out = attend_chunked(
+        q_full, k_full, v,
+        q_positions=positions,
+        k_positions=positions,
+        window=0,
+        causal=True,
+        scale=qk_head ** -0.5,
+    )
+    return out.reshape(b, s, h * m.v_head_dim) @ params["w_o"]
+
+
+def mla_prefill_cache(
+    params: Dict, cfg: ArchConfig, x: jnp.ndarray, positions: jnp.ndarray
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Latent cache entries: (c_kv (B,S,R), k_rope (B,S,rope))."""
+    m = cfg.mla
+    dkv = x @ params["w_dkv"]
+    c_kv = layers.rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank])
+    k_rope = dkv[..., m.kv_lora_rank :][:, :, None]
+    ang = layers.rope_angles(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    return c_kv, layers.apply_rope(k_rope, ang)[:, :, 0]
+
+
+def mla_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    x: jnp.ndarray,  # (B, 1, d)
+    c_cache: jnp.ndarray,  # (B, T, R) latent cache
+    rope_cache: jnp.ndarray,  # (B, T, rope_dim)
+    position: jnp.ndarray,  # (B,)
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Absorbed-form decode: scores = q_nope W_uk^T . c  +  q_rope . k_rope.
+
+    The cache stores ONLY (c_kv, k_rope): kv_lora_rank + qk_rope_head_dim
+    = 288 floats/token for MiniCPM3 vs 2*40*64 = 5120 for the equivalent
+    GQA cache — an 17.8x KV compression, which is exactly what makes MLA
+    the best offload/serving case in DESIGN.md §Arch-applicability."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    q_lat = layers.rmsnorm(params["q_norm"], x @ params["w_dq"])
+    q = (q_lat @ params["w_uq"]).reshape(b, 1, h, qk_head)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    ang = layers.rope_angles(position[:, None], m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = layers.apply_rope(q_rope, ang)[:, 0]  # (B, H, rope)
+
+    dkv = x @ params["w_dkv"]
+    c_new = layers.rmsnorm(params["kv_norm"], dkv[..., : m.kv_lora_rank])[:, 0]
+    k_rope_new = layers.apply_rope(
+        dkv[..., m.kv_lora_rank :][:, :, None], ang
+    )[:, 0, 0]
+    c_cache = _cache_write(c_cache, c_new, position)
+    rope_cache = _cache_write(rope_cache, k_rope_new, position)
+
+    # absorb W_uk into q: (B, H, nope) @ (R, H, nope)^T -> (B, H, R)
+    w_uk = params["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bhr,btr->bht", q_abs, c_cache.astype(jnp.float32))
+    scores += jnp.einsum(
+        "bhp,btp->bht", q_rope.astype(jnp.float32),
+        rope_cache.astype(jnp.float32),
+    )
+    scores *= qk_head ** -0.5
+    t = c_cache.shape[1]
+    valid = jnp.arange(t)[None] <= position[:, None]
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bht,btr->bhr", p, c_cache.astype(jnp.float32))
+    # absorb W_uv on the way out: (B, H, R) x (R, H, v) -> (B, H, v)
+    w_uv = params["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    o = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv.astype(jnp.float32))
+    out = o.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ params["w_o"]
+    return out, c_cache, rope_cache

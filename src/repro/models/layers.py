@@ -1,0 +1,169 @@
+"""Shared neural-net building blocks (pure JAX, explicit param pytrees).
+
+Every module is a pair of functions: ``init_*(key, ...) -> params`` and
+``apply`` (here usually inlined at call sites). Params are plain nested
+dicts so they stay trivially compatible with jax.eval_shape (the dry-run
+never materializes them), sharding-spec rules (sharding/specs.py matches
+on dict paths), and checkpointing.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_INIT_SCALE = 0.02
+
+
+def _dense_init(key, shape, dtype, scale: Optional[float] = None):
+    scale = DEFAULT_INIT_SCALE if scale is None else scale
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-6):
+    """RMSNorm with (1 + scale) weighting (gemma convention; a zero-init
+    scale is exactly standard RMSNorm at init)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32
+    )
+    return y.astype(x.dtype)
+
+
+def init_norm(kind: str, d: int, dtype=jnp.float32):
+    return init_rmsnorm(d, dtype) if kind == "rmsnorm" else init_layernorm(d, dtype)
+
+
+def apply_norm(kind: str, params, x):
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": _dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": _dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": _dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": _dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": _dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params, x, kind: str):
+    if kind == "swiglu":
+        gate = jax.nn.silu(x @ params["w_gate"])
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "geglu":
+        gate = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+        return (gate * (x @ params["w_up"])) @ params["w_down"]
+    if kind == "gelu":
+        return jax.nn.gelu(x @ params["w_up"], approximate=True) @ params["w_down"]
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": _dense_init(key, (vocab, d), dtype)}
+
+
+def embed(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x):
+    """Logits via the (possibly tied) embedding table."""
+    return x @ params["table"].T
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (NeoX half-split convention)
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float):
+    """positions (...,) -> angles (..., head_dim//2) in f32."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    return positions.astype(jnp.float32)[..., None] * inv_freq
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x (..., S, H, D); angles (..., S, D//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    ang = angles[..., None, :]  # add head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def mrope_angles(
+    positions: jnp.ndarray,  # (3, ..., S) — temporal / height / width
+    head_dim: int,
+    theta: float,
+    sections: Sequence[int],
+) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE: the head_dim//2 frequency slots are
+    partitioned into (t, h, w) sections; each section takes its angle from
+    the corresponding position component. Text tokens pass identical
+    components, which makes M-RoPE collapse to standard RoPE (Sec. 2.1 of
+    arXiv:2409.12191)."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    ang = jax.vmap(lambda p: rope_angles(p, head_dim, theta))(positions)
+    # ang: (3, ..., S, half); build a per-frequency selector
+    sec_id = jnp.concatenate(
+        [jnp.full((s,), i, dtype=jnp.int32) for i, s in enumerate(sections)]
+    )
+    return jnp.take_along_axis(
+        jnp.moveaxis(ang, 0, -1),  # (..., S, half, 3)
+        sec_id[(None,) * (ang.ndim - 2) + (slice(None), None)],
+        axis=-1,
+    )[..., 0]
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma-style logit soft-capping; identity when cap == 0."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)

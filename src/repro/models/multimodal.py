@@ -1,0 +1,65 @@
+"""Modality frontend STUBS (the one mandated carve-out).
+
+[audio] and [vlm] architectures specify the transformer backbone only;
+the real frontends (mel-spectrogram + conformer codec for seamless-m4t,
+ViT + dynamic-resolution projector for qwen2-vl) are NOT implemented.
+Instead these helpers produce correctly-shaped frame/patch embeddings:
+ShapeDtypeStructs for the dry-run, deterministic pseudo-embeddings for
+smoke tests, and M-RoPE position grids for qwen2-vl.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+
+
+def frontend_spec(cfg: ArchConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """Shape of the precomputed embeddings the backbone consumes."""
+    assert cfg.modality in ("audio", "vision"), cfg.modality
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_tokens, cfg.d_model), jnp.dtype(cfg.dtype)
+    )
+
+
+def fake_frontend_embeds(
+    cfg: ArchConfig, batch: int, seed: int = 0
+) -> jnp.ndarray:
+    """Deterministic stand-in embeddings (unit RMS like real encoders)."""
+    rng = np.random.default_rng(seed)
+    spec = frontend_spec(cfg, batch)
+    x = rng.normal(0.0, 1.0, size=spec.shape).astype(np.float32)
+    return jnp.asarray(x, dtype=spec.dtype)
+
+
+def mrope_positions(
+    batch: int,
+    text_len: int,
+    image_grid: Optional[Tuple[int, int]] = None,
+    temporal_offset: int = 0,
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE position ids, shape (3, B, S).
+
+    Vision patches get (t=const, h=row, w=col); text tokens get equal
+    (t, h, w) components continuing after the visual block — the layout
+    of arXiv:2409.12191 §2.1.
+    """
+    parts = []
+    if image_grid is not None:
+        gh, gw = image_grid
+        t = jnp.zeros((gh * gw,), jnp.int32) + temporal_offset
+        h = jnp.repeat(jnp.arange(gh, dtype=jnp.int32), gw)
+        w = jnp.tile(jnp.arange(gw, dtype=jnp.int32), gh)
+        parts.append(jnp.stack([t, h, w]))
+        start = temporal_offset + max(gh, gw)
+    else:
+        start = temporal_offset
+    text = jnp.arange(start, start + text_len, dtype=jnp.int32)
+    parts.append(jnp.broadcast_to(text, (3, text_len)))
+    pos = jnp.concatenate(parts, axis=1)  # (3, S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, pos.shape[1]))

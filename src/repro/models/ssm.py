@@ -1,0 +1,259 @@
+"""Mamba2 / SSD (state-space duality) blocks [arXiv:2405.21060].
+
+Training/prefill uses the chunked SSD algorithm (Listing 1 of the Mamba2
+paper): within-chunk quadratic attention-like term + inter-chunk
+recurrence on the (heads, head_dim, d_state) state, all in lax.scan /
+einsum form so it shards cleanly.
+
+Decode keeps the constant-size recurrent state:
+    h <- h * exp(dt * A) + dt * (B outer x);   y = C . h + D * x
+which is the property DESIGN.md highlights: the inter-step payload the
+paper worries about (Fig. 3) is O(1) for SSMs.
+
+Sharding note: the reference implementation packs [z, x, B, C, dt] into
+one in_proj; we keep SEPARATE projections so the d_inner-sized tensors
+(z, x) can shard over the 'model' axis Megatron-style while the small
+B/C/dt projections stay replicated — a packed layout would put shard
+boundaries mid-slice and force all-gathers every layer. The depthwise
+conv is likewise split into an x-conv (sharded channels) and a bc-conv
+(replicated); depthwise convs are per-channel independent, so the split
+is mathematically identical to the packed original.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, SSMConfig
+from repro.models import layers
+
+
+class SSMState(NamedTuple):
+    conv_x: jnp.ndarray  # (B, d_conv - 1, d_inner)
+    conv_bc: jnp.ndarray  # (B, d_conv - 1, 2 * G * N)
+    ssd: jnp.ndarray  # (B, H, P, N) recurrent state (f32)
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    bc_ch = 2 * s.n_groups * s.d_state
+    return s, d_inner, n_heads, bc_ch
+
+
+def init_ssm_block(key, cfg: ArchConfig, dtype=jnp.float32) -> Dict:
+    s, d_inner, n_heads, bc_ch = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    return {
+        "w_z": layers._dense_init(ks[0], (d, d_inner), dtype),
+        "w_x": layers._dense_init(ks[1], (d, d_inner), dtype),
+        "w_bc": layers._dense_init(ks[2], (d, bc_ch), dtype),
+        "w_dt": layers._dense_init(ks[3], (d, n_heads), dtype),
+        "conv_x_w": layers._dense_init(ks[4], (s.d_conv, d_inner), dtype, scale=0.5),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": layers._dense_init(ks[5], (s.d_conv, bc_ch), dtype, scale=0.5),
+        "conv_bc_b": jnp.zeros((bc_ch,), dtype),
+        # A in (-exp) parameterization: A = -exp(a_log), init near -1.
+        "a_log": jnp.zeros((n_heads,), jnp.float32),
+        "dt_bias": jnp.full((n_heads,), -2.0, jnp.float32),  # softplus ~ 0.12
+        "d_skip": jnp.ones((n_heads,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_inner, dtype),
+        "w_out": layers._dense_init(ks[0], (d_inner, d), dtype),
+    }
+
+
+def _causal_conv(w, bias, x: jnp.ndarray, d_conv: int) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) + SiLU."""
+    pad = jnp.pad(x, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + x.shape[1]] * w[i][None, None] for i in range(d_conv)
+    )
+    return jax.nn.silu(out + bias[None, None])
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k],
+    -inf above the diagonal (Mamba2 reference helper)."""
+    t = x.shape[-1]
+    x_cum = jnp.cumsum(x, axis=-1)
+    diff = x_cum[..., :, None] - x_cum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jnp.ndarray,  # (B, S, H, P)
+    dt: jnp.ndarray,  # (B, S, H) — already softplus'd
+    a: jnp.ndarray,  # (H,) negative decay rates
+    b: jnp.ndarray,  # (B, S, G, N)
+    c: jnp.ndarray,  # (B, S, G, N)
+    chunk: int,
+    h0: jnp.ndarray = None,  # (B, H, P, N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan. Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    x_f = x.astype(jnp.float32)
+    dt_f = dt.astype(jnp.float32)
+    da = dt_f * a[None, None, :]  # (B, S, H) log-decay per step
+    xb = x_f * dt_f[..., None]  # fold dt into the input
+
+    xc = xb.reshape(bs, nc, chunk, h, p)
+    dac = da.reshape(bs, nc, chunk, h)
+    bc = jnp.repeat(b, rep, axis=2).reshape(bs, nc, chunk, h, n).astype(jnp.float32)
+    cc = jnp.repeat(c, rep, axis=2).reshape(bs, nc, chunk, h, n).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    l_mat = jnp.exp(_segsum(dac.transpose(0, 1, 3, 2)))  # (B, nc, H, T, T)
+    scores = jnp.einsum("bzihn,bzjhn->bzhij", cc, bc)  # (B, nc, H, T, T)
+    y_diag = jnp.einsum("bzhij,bzjhp->bzihp", scores * l_mat, xc)
+
+    # ---- chunk states: decay-to-end weighted sum of inputs ----
+    dac_cum = jnp.cumsum(dac, axis=2)
+    decay_to_end = jnp.exp(dac_cum[:, :, -1:, :] - dac_cum)  # (B,nc,T,H)
+    states = jnp.einsum(
+        "bzthn,bzth,bzthp->bzhpn", bc, decay_to_end, xc
+    )  # (B, nc, H, P, N)
+
+    # ---- inter-chunk recurrence over chunk boundary states ----
+    chunk_decay = jnp.exp(jnp.sum(dac, axis=2))  # (B, nc, H)
+
+    def scan_fn(h_prev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev  # emit state *entering* the chunk
+
+    init = (
+        jnp.zeros((bs, h, p, n), jnp.float32)
+        if h0 is None
+        else h0.astype(jnp.float32)
+    )
+    final, h_in = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_in = h_in.transpose(1, 0, 2, 3, 4)  # (B, nc, H, P, N)
+
+    # ---- contribution of the carried state to each position ----
+    decay_from_start = jnp.exp(dac_cum)  # (B, nc, T, H)
+    y_off = jnp.einsum("bzthn,bzhpn,bzth->bzthp", cc, h_in, decay_from_start)
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def init_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s, d_inner, n_heads, bc_ch = _dims(cfg)
+    return SSMState(
+        conv_x=jnp.zeros((batch, s.d_conv - 1, d_inner), dtype),
+        conv_bc=jnp.zeros((batch, s.d_conv - 1, bc_ch), dtype),
+        ssd=jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def ssm_forward(
+    params: Dict,
+    cfg: ArchConfig,
+    u: jnp.ndarray,  # (B, S, d_model)
+    h0: jnp.ndarray = None,
+) -> Tuple[jnp.ndarray, SSMState]:
+    """Train/prefill pass. Returns (y (B,S,d_model), final SSMState) —
+    the state hands off to ``ssm_decode`` for serving."""
+    s, d_inner, n_heads, bc_ch = _dims(cfg)
+    bsz, seq, _ = u.shape
+    z = u @ params["w_z"]
+    x_raw = u @ params["w_x"]
+    bc_raw = u @ params["w_bc"]
+    dt = u @ params["w_dt"]
+
+    # conv windows for decode handoff: last (d_conv - 1) raw inputs
+    def tail(arr, ch):
+        pad_front = jnp.zeros((bsz, max(s.d_conv - 1 - seq, 0), ch), u.dtype)
+        return jnp.concatenate([pad_front, arr], axis=1)[:, -(s.d_conv - 1):]
+
+    conv_x_tail = tail(x_raw, d_inner)
+    conv_bc_tail = tail(bc_raw, bc_ch)
+
+    x = _causal_conv(params["conv_x_w"], params["conv_x_b"], x_raw, s.d_conv)
+    bc = _causal_conv(params["conv_bc_w"], params["conv_bc_b"], bc_raw, s.d_conv)
+
+    gn = s.n_groups * s.d_state
+    x = x.reshape(bsz, seq, n_heads, s.head_dim)
+    b = bc[..., :gn].reshape(bsz, seq, s.n_groups, s.d_state)
+    c = bc[..., gn:].reshape(bsz, seq, s.n_groups, s.d_state)
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+
+    chunk = s.chunk_size
+    pad = (-seq) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_act = jnp.pad(dt_act, ((0, 0), (0, pad), (0, 0)))
+    y, final = ssd_chunked(x, dt_act, a, b, c, chunk, h0)
+    y = y[:, :seq]
+    y = y + x[:, :seq] * params["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, seq, d_inner)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z)).astype(u.dtype)
+    return y @ params["w_out"], SSMState(
+        conv_x=conv_x_tail, conv_bc=conv_bc_tail, ssd=final
+    )
+
+
+def ssm_decode(
+    params: Dict,
+    cfg: ArchConfig,
+    u: jnp.ndarray,  # (B, 1, d_model)
+    state: SSMState,
+) -> Tuple[jnp.ndarray, SSMState]:
+    """One recurrent decode step with conv+SSD state update."""
+    s, d_inner, n_heads, bc_ch = _dims(cfg)
+    bsz = u.shape[0]
+    z = u @ params["w_z"]
+    x_new = (u @ params["w_x"])[:, 0]  # (B, d_inner)
+    bc_new = (u @ params["w_bc"])[:, 0]
+    dt = (u @ params["w_dt"])[:, 0]
+
+    def conv_step(win_state, new, w, bias):
+        window = jnp.concatenate([win_state, new[:, None]], axis=1)
+        out = jnp.einsum("btc,tc->bc", window, w) + bias
+        return jax.nn.silu(out), window[:, 1:]
+
+    x1, new_conv_x = conv_step(
+        state.conv_x, x_new, params["conv_x_w"], params["conv_x_b"]
+    )
+    bc1, new_conv_bc = conv_step(
+        state.conv_bc, bc_new, params["conv_bc_w"], params["conv_bc_b"]
+    )
+
+    gn = s.n_groups * s.d_state
+    x1 = x1.reshape(bsz, n_heads, s.head_dim)
+    b1 = bc1[..., :gn].reshape(bsz, s.n_groups, s.d_state)
+    c1 = bc1[..., gn:].reshape(bsz, s.n_groups, s.d_state)
+    rep = n_heads // s.n_groups
+    b1 = jnp.repeat(b1, rep, axis=1)  # (B, H, N)
+    c1 = jnp.repeat(c1, rep, axis=1)
+
+    dt_act = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt_act * a[None])  # (B, H)
+
+    x_in = x1.astype(jnp.float32) * dt_act[..., None]
+    new_ssd = state.ssd * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", x_in, b1.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssd, c1.astype(jnp.float32))
+    y = y + x1.astype(jnp.float32) * params["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner).astype(u.dtype)
+    y = layers.rmsnorm(params["norm"], y * jax.nn.silu(z)).astype(u.dtype)
+    return y @ params["w_out"], SSMState(new_conv_x, new_conv_bc, new_ssd)

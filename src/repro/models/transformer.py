@@ -1,0 +1,853 @@
+"""Model assembly: init / train forward / prefill / decode for all six
+architecture families, built scan-over-layers so the lowered HLO stays
+O(1) in depth (essential for the 512-device dry-run compiles).
+
+Layer stacks are stored as *stacked* param pytrees (leading L axis) and
+driven by ``jax.lax.scan``; per-layer heterogeneity (gemma3's local:global
+pattern) rides along as scanned *data* (a (L,) window array), so one
+layer graph serves every layer. The zamba2 hybrid uses a two-level scan:
+outer over groups of ``shared_attn_every`` SSM layers, with the single
+shared attention block (one set of weights, its own KV cache per
+application) applied between groups.
+
+The ``shard`` hook keeps this module mesh-agnostic: the launcher injects
+``with_sharding_constraint`` calls keyed by logical names
+(sharding/specs.py); unit tests pass the identity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention, layers, moe, ssm
+
+ShardFn = Callable[[jnp.ndarray, str], jnp.ndarray]
+
+
+def _no_shard(x: jnp.ndarray, name: str) -> jnp.ndarray:
+    return x
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+
+def _init_decoder_layer(key, cfg: ArchConfig, dtype) -> Dict:
+    """One decoder block (attention archs)."""
+    k_attn, k_mlp, k_cross = jax.random.split(key, 3)
+    p = {
+        "attn_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init_attention(k_attn, cfg, dtype),
+        "mlp_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = moe.init_moe(k_mlp, cfg, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp, dtype)
+    if cfg.cross_attention:
+        p["cross_norm"] = layers.init_norm(cfg.norm, cfg.d_model, dtype)
+        p["cross"] = attention.init_cross_attention(k_cross, cfg, dtype)
+    return p
+
+
+def _init_encoder_layer(key, cfg: ArchConfig, dtype) -> Dict:
+    k_attn, k_mlp = jax.random.split(key)
+    return {
+        "attn_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "attn": attention.init_attention(k_attn, cfg, dtype),
+        "mlp_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "mlp": layers.init_mlp(k_mlp, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+    }
+
+
+def _init_ssm_layer(key, cfg: ArchConfig, dtype) -> Dict:
+    return {
+        "norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        "ssm": ssm.init_ssm_block(key, cfg, dtype),
+    }
+
+
+def _stack_init(per_layer_init, key, n: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(per_layer_init)(keys)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Dict:
+    dtype = _dtype(cfg)
+    k_embed, k_layers, k_shared, k_enc, k_head = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": layers.init_embedding(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": layers._dense_init(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+        }
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        params["layers"] = _stack_init(
+            lambda k: _init_decoder_layer(k, cfg, dtype), k_layers, cfg.num_layers
+        )
+    elif cfg.arch_type == "ssm":
+        params["layers"] = _stack_init(
+            lambda k: _init_ssm_layer(k, cfg, dtype), k_layers, cfg.num_layers
+        )
+    elif cfg.arch_type == "hybrid":
+        params["layers"] = _stack_init(
+            lambda k: _init_ssm_layer(k, cfg, dtype), k_layers, cfg.num_layers
+        )
+        # ONE shared attention block (zamba2): attention + its own MLP
+        k_sa, k_sm = jax.random.split(k_shared)
+        params["shared_attn"] = {
+            "attn_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "attn": attention.init_attention(k_sa, cfg, dtype),
+            "mlp_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+            "mlp": layers.init_mlp(k_sm, cfg.d_model, cfg.d_ff, cfg.mlp, dtype),
+        }
+    else:
+        raise ValueError(cfg.arch_type)
+
+    if cfg.encoder_layers:
+        params["encoder"] = {
+            "layers": _stack_init(
+                lambda k: _init_encoder_layer(k, cfg, dtype),
+                k_enc,
+                cfg.encoder_layers,
+            ),
+            "final_norm": layers.init_norm(cfg.norm, cfg.d_model, dtype),
+        }
+    return params
+
+
+def param_shapes(cfg: ArchConfig) -> Dict:
+    """Parameter ShapeDtypeStructs without allocation (dry-run path)."""
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0)
+    )
+
+
+# ===========================================================================
+# Embedding / head
+# ===========================================================================
+
+
+def _embed_tokens(cfg: ArchConfig, params, tokens: jnp.ndarray) -> jnp.ndarray:
+    x = layers.embed(params["embed"], tokens)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _lm_logits(cfg: ArchConfig, params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = x @ params["lm_head"]["w"]
+    return layers.softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+
+
+# ===========================================================================
+# Layer bodies (shared by train/prefill; decode versions further below)
+# ===========================================================================
+
+
+def _decoder_layer_fwd(
+    cfg: ArchConfig,
+    lp: Dict,
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    window,
+    memory: Optional[jnp.ndarray],
+    shard: ShardFn,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x_out, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(cfg.norm, lp["attn_norm"], x)
+    if cfg.attention == "mla":
+        attn_out = attention.mla_forward(lp["attn"], cfg, h, positions)
+    else:
+        attn_out = attention.gqa_forward(
+            lp["attn"], cfg, h, positions, window=window
+        )
+    x = x + shard(attn_out, "activation")
+    if cfg.cross_attention and memory is not None:
+        h = layers.apply_norm(cfg.norm, lp["cross_norm"], x)
+        qpos = positions if positions.ndim == 1 else positions[0, 0]
+        cross_out = attention.gqa_forward(
+            lp["cross"], cfg, h, qpos, window=0, causal=False,
+            kv_override=(memory, memory),
+        )
+        x = x + shard(cross_out, "activation")
+    h = layers.apply_norm(cfg.norm, lp["mlp_norm"], x)
+    if cfg.moe is not None:
+        mlp_out, aux = moe.moe_forward(lp["moe"], cfg, h, shard=shard)
+    else:
+        mlp_out = layers.mlp(lp["mlp"], h, cfg.mlp)
+    x = x + shard(mlp_out, "activation")
+    return x, aux
+
+
+def _ssm_layer_fwd(cfg, lp, x, h0, shard: ShardFn):
+    h = layers.apply_norm(cfg.norm, lp["norm"], x)
+    y, state = ssm.ssm_forward(lp["ssm"], cfg, h, h0)
+    return x + shard(y, "activation"), state
+
+
+def _shared_attn_fwd(cfg, sp, x, positions, shard: ShardFn):
+    h = layers.apply_norm(cfg.norm, sp["attn_norm"], x)
+    attn_out = attention.gqa_forward(sp["attn"], cfg, h, positions, window=0)
+    x = x + shard(attn_out, "activation")
+    h = layers.apply_norm(cfg.norm, sp["mlp_norm"], x)
+    x = x + shard(layers.mlp(sp["mlp"], h, cfg.mlp), "activation")
+    return x
+
+
+# ===========================================================================
+# Forward (train / prefill trunk): tokens -> final hidden states
+# ===========================================================================
+
+
+def _window_array(cfg: ArchConfig) -> jnp.ndarray:
+    return jnp.asarray(cfg.layer_window_sizes(), jnp.int32)
+
+
+def _run_encoder(cfg, params, enc_in, shard: ShardFn):
+    """Bidirectional encoder over precomputed frame embeddings."""
+    pos = jnp.arange(enc_in.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = layers.apply_norm(cfg.norm, lp["attn_norm"], x)
+        a = attention.gqa_forward(lp["attn"], cfg, h, pos, window=0, causal=False)
+        x = x + shard(a, "activation")
+        h = layers.apply_norm(cfg.norm, lp["mlp_norm"], x)
+        x = x + shard(layers.mlp(lp["mlp"], h, cfg.mlp), "activation")
+        return x, None
+
+    x, _ = jax.lax.scan(body, enc_in, params["encoder"]["layers"])
+    return layers.apply_norm(
+        cfg.norm, params["encoder"]["final_norm"], x
+    )
+
+
+def trunk(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jnp.ndarray,  # (B, S)
+    *,
+    positions: Optional[jnp.ndarray] = None,  # (S,) or mrope (3, B, S)
+    frontend_embeds: Optional[jnp.ndarray] = None,  # (B, F, d)
+    encoder_tokens: Optional[jnp.ndarray] = None,  # (B, F, d) audio frames
+    shard: ShardFn = _no_shard,
+    remat: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Embeds, runs the layer stack, final-norms. Returns (hidden, aux)."""
+    b, s = tokens.shape
+    x = _embed_tokens(cfg, params, tokens)
+    memory = None
+    if encoder_tokens is not None:
+        memory = _run_encoder(cfg, params, encoder_tokens.astype(x.dtype), shard)
+    if frontend_embeds is not None and encoder_tokens is None:
+        # VLM / audio-LM: patch embeddings prepended to the text stream
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+    x = shard(x, "activation")
+
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    elif cfg.mrope and frontend_embeds is not None:
+        pass  # caller supplied full positions covering frontend + text
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        windows = _window_array(cfg)
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, win = xs
+            h, a = _decoder_layer_fwd(cfg, lp, h, positions, win, memory, shard)
+            return (h, aux + a), None
+
+        step = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(
+            step, (x, aux_total), (params["layers"], windows)
+        )
+
+    elif cfg.arch_type == "ssm":
+
+        def body(h, lp):
+            h, _ = _ssm_layer_fwd(cfg, lp, h, None, shard)
+            return h, None
+
+        step = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(step, x, params["layers"])
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups = cfg.num_layers // k
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((n_groups, k) + a.shape[1:]), params["layers"]
+        )
+        sp = params["shared_attn"]
+
+        def group_body(h, group_params):
+            def inner(hh, lp):
+                hh, _ = _ssm_layer_fwd(cfg, lp, hh, None, shard)
+                return hh, None
+
+            h, _ = jax.lax.scan(inner, h, group_params)
+            h = _shared_attn_fwd(cfg, sp, h, positions, shard)
+            return h, None
+
+        step = jax.checkpoint(group_body) if remat else group_body
+        x, _ = jax.lax.scan(step, x, stacked)
+    else:
+        raise ValueError(cfg.arch_type)
+
+    return layers.apply_norm(cfg.norm, params["final_norm"], x), aux_total
+
+
+def forward(cfg: ArchConfig, params: Dict, batch: Dict, *,
+            shard: ShardFn = _no_shard, remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full forward to logits. batch keys per configs.shapes.token_inputs."""
+    hidden, aux = trunk(
+        cfg,
+        params,
+        batch["tokens"],
+        positions=batch.get("positions"),
+        frontend_embeds=batch.get("frontend_embeds"),
+        encoder_tokens=batch.get("encoder_tokens"),
+        shard=shard,
+        remat=remat,
+    )
+    logits = _lm_logits(cfg, params, hidden)
+    return shard(logits, "logits"), aux
+
+
+def loss_fn(cfg: ArchConfig, params: Dict, batch: Dict, *,
+            shard: ShardFn = _no_shard, remat: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Next-token cross entropy (+ MoE aux). Frontend tokens, if any, are
+    excluded from the loss (they precede the text stream)."""
+    logits, aux = forward(cfg, params, batch, shard=shard, remat=remat)
+    targets = batch["targets"]
+    n_text = targets.shape[1]
+    logits = logits[:, -n_text:]  # drop frontend positions
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    aux_w = cfg.moe.router_aux_weight if cfg.moe is not None else 0.0
+    total = loss + aux_w * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ===========================================================================
+# KV / state caches
+# ===========================================================================
+
+
+class Cache(NamedTuple):
+    """Decode-time state for every family (unused fields are None)."""
+
+    position: jnp.ndarray  # (B,) next write position
+    attn_k: Optional[jnp.ndarray] = None  # (L, B, T, KV, D)
+    attn_v: Optional[jnp.ndarray] = None
+    # pattern-ring mode (§Perf iteration 3): windowed layers keep ring
+    # buffers of length `window`; attn_k/attn_v then hold only the global
+    # layers' full-length caches.
+    local_k: Optional[jnp.ndarray] = None  # (L_local, B, W, KV, D)
+    local_v: Optional[jnp.ndarray] = None
+    mla_c: Optional[jnp.ndarray] = None  # (L, B, T, R)
+    mla_rope: Optional[jnp.ndarray] = None  # (L, B, T, P)
+    ssm_conv_x: Optional[jnp.ndarray] = None  # (L, B, d_conv-1, d_inner)
+    ssm_conv_bc: Optional[jnp.ndarray] = None  # (L, B, d_conv-1, 2GN)
+    ssm_state: Optional[jnp.ndarray] = None  # (L, B, H, P, N)
+    shared_k: Optional[jnp.ndarray] = None  # (G, B, T, KV, D) zamba2
+    shared_v: Optional[jnp.ndarray] = None
+    cross_k: Optional[jnp.ndarray] = None  # (L, B, F, KV, D) enc-dec
+    cross_v: Optional[jnp.ndarray] = None
+
+
+def _pattern_split(cfg: ArchConfig):
+    """(local_layer_indices, global_layer_indices) per the window table."""
+    wins = cfg.layer_window_sizes()
+    local = [i for i, w in enumerate(wins) if w > 0]
+    glob = [i for i, w in enumerate(wins) if w == 0]
+    return local, glob
+
+
+def init_cache(
+    cfg: ArchConfig, batch: int, max_len: int, ring: bool = False
+) -> Cache:
+    dtype = _dtype(cfg)
+    l = cfg.num_layers
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    pos = jnp.zeros((batch,), jnp.int32)
+    if cfg.arch_type == "ssm":
+        s = ssm.init_state(cfg, batch, dtype)
+        return Cache(
+            position=pos,
+            ssm_conv_x=jnp.broadcast_to(s.conv_x, (l,) + s.conv_x.shape),
+            ssm_conv_bc=jnp.broadcast_to(s.conv_bc, (l,) + s.conv_bc.shape),
+            ssm_state=jnp.broadcast_to(s.ssd, (l,) + s.ssd.shape),
+        )
+    if cfg.arch_type == "hybrid":
+        s = ssm.init_state(cfg, batch, dtype)
+        g = cfg.num_layers // cfg.shared_attn_every
+        return Cache(
+            position=pos,
+            ssm_conv_x=jnp.broadcast_to(s.conv_x, (l,) + s.conv_x.shape),
+            ssm_conv_bc=jnp.broadcast_to(s.conv_bc, (l,) + s.conv_bc.shape),
+            ssm_state=jnp.broadcast_to(s.ssd, (l,) + s.ssd.shape),
+            shared_k=jnp.zeros((g, batch, max_len, kvh, hd), dtype),
+            shared_v=jnp.zeros((g, batch, max_len, kvh, hd), dtype),
+        )
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return Cache(
+            position=pos,
+            mla_c=jnp.zeros((l, batch, max_len, m.kv_lora_rank), dtype),
+            mla_rope=jnp.zeros((l, batch, max_len, m.qk_rope_head_dim), dtype),
+        )
+    if ring and cfg.num_heads and any(w > 0 for w in cfg.layer_window_sizes()):
+        local, glob = _pattern_split(cfg)
+        w = min(cfg.sliding_window, max_len)
+        cache = Cache(
+            position=pos,
+            local_k=jnp.zeros((len(local), batch, w, kvh, hd), dtype),
+            local_v=jnp.zeros((len(local), batch, w, kvh, hd), dtype),
+            attn_k=(
+                jnp.zeros((len(glob), batch, max_len, kvh, hd), dtype)
+                if glob else None
+            ),
+            attn_v=(
+                jnp.zeros((len(glob), batch, max_len, kvh, hd), dtype)
+                if glob else None
+            ),
+        )
+        return cache
+    cache = Cache(
+        position=pos,
+        attn_k=jnp.zeros((l, batch, max_len, kvh, hd), dtype),
+        attn_v=jnp.zeros((l, batch, max_len, kvh, hd), dtype),
+    )
+    if cfg.cross_attention:
+        f = cfg.frontend_tokens
+        cache = cache._replace(
+            cross_k=jnp.zeros((l, batch, f, kvh, hd), dtype),
+            cross_v=jnp.zeros((l, batch, f, kvh, hd), dtype),
+        )
+    return cache
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int, ring: bool = False):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len, ring))
+
+
+# ===========================================================================
+# Decode step
+# ===========================================================================
+
+
+def decode_step(
+    cfg: ArchConfig,
+    params: Dict,
+    cache: Cache,
+    tokens: jnp.ndarray,  # (B, 1)
+    *,
+    positions: Optional[jnp.ndarray] = None,  # mrope (3, B, 1)
+    shard: ShardFn = _no_shard,
+) -> Tuple[jnp.ndarray, Cache]:
+    """One serving step: consume ONE token per sequence, emit logits for
+    the next, update the cache in place (functionally). When the cache was
+    built with ``ring=True`` (``local_k`` present), sliding-window layers
+    use ring buffers of length `window` (§Perf iteration 3)."""
+    b = tokens.shape[0]
+    x = _embed_tokens(cfg, params, tokens)
+    x = shard(x, "decode_activation")
+    pos = cache.position  # (B,)
+    mpos = positions if cfg.mrope else pos
+
+    if cache.local_k is not None:
+        return _decode_step_pattern_ring(cfg, params, cache, x, pos, shard)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        windows = _window_array(cfg)
+
+        def body(carry, xs):
+            h = carry
+            lp, win, kc, vc, cc, rc, xk, xv = xs
+            hh = layers.apply_norm(cfg.norm, lp["attn_norm"], h)
+            if cfg.attention == "mla":
+                a, cc, rc = attention.mla_decode(lp["attn"], cfg, hh, cc, rc, pos)
+            else:
+                a, kc, vc = attention.gqa_decode(
+                    lp["attn"], cfg, hh, kc, vc, mpos, window=win,
+                    cache_pos=pos,
+                )
+            h = h + shard(a, "decode_activation")
+            if cfg.cross_attention:
+                hh = layers.apply_norm(cfg.norm, lp["cross_norm"], h)
+                h = h + shard(
+                    attention.gqa_cross_decode(lp["cross"], cfg, hh, xk, xv),
+                    "decode_activation",
+                )
+            hh = layers.apply_norm(cfg.norm, lp["mlp_norm"], h)
+            if cfg.moe is not None:
+                m, _ = moe.moe_forward(lp["moe"], cfg, hh, shard=shard)
+            else:
+                m = layers.mlp(lp["mlp"], hh, cfg.mlp)
+            h = h + shard(m, "decode_activation")
+            return h, (kc, vc, cc, rc)
+
+        l = cfg.num_layers
+        dummy = jnp.zeros((l, 1, 1), _dtype(cfg))
+        xs = (
+            params["layers"],
+            windows,
+            cache.attn_k if cache.attn_k is not None else dummy,
+            cache.attn_v if cache.attn_v is not None else dummy,
+            cache.mla_c if cache.mla_c is not None else dummy,
+            cache.mla_rope if cache.mla_rope is not None else dummy,
+            cache.cross_k if cache.cross_k is not None else dummy,
+            cache.cross_v if cache.cross_v is not None else dummy,
+        )
+        x, (nk, nv, nc, nr) = jax.lax.scan(body, x, xs)
+        cache = cache._replace(
+            attn_k=nk if cache.attn_k is not None else None,
+            attn_v=nv if cache.attn_v is not None else None,
+            mla_c=nc if cache.mla_c is not None else None,
+            mla_rope=nr if cache.mla_rope is not None else None,
+        )
+
+    elif cfg.arch_type == "ssm":
+
+        def body(h, xs):
+            lp, cx, cbc, st = xs
+            hh = layers.apply_norm(cfg.norm, lp["norm"], h)
+            y, new = ssm.ssm_decode(
+                lp["ssm"], cfg, hh, ssm.SSMState(cx, cbc, st)
+            )
+            return h + shard(y, "decode_activation"), (
+                new.conv_x, new.conv_bc, new.ssd
+            )
+
+        x, (ncx, ncbc, nstate) = jax.lax.scan(
+            body, x,
+            (params["layers"], cache.ssm_conv_x, cache.ssm_conv_bc, cache.ssm_state),
+        )
+        cache = cache._replace(
+            ssm_conv_x=ncx, ssm_conv_bc=ncbc, ssm_state=nstate
+        )
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.shared_attn_every
+        g = cfg.num_layers // k
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, k) + a.shape[1:]), params["layers"]
+        )
+        conv_x_g = cache.ssm_conv_x.reshape((g, k) + cache.ssm_conv_x.shape[1:])
+        conv_bc_g = cache.ssm_conv_bc.reshape((g, k) + cache.ssm_conv_bc.shape[1:])
+        state_g = cache.ssm_state.reshape((g, k) + cache.ssm_state.shape[1:])
+        sp = params["shared_attn"]
+
+        def group_body(h, xs):
+            gp, cxg, cbcg, st, sk, sv = xs
+
+            def inner(hh, inner_xs):
+                lp, cx1, cbc1, s1 = inner_xs
+                hn = layers.apply_norm(cfg.norm, lp["norm"], hh)
+                y, new = ssm.ssm_decode(
+                    lp["ssm"], cfg, hn, ssm.SSMState(cx1, cbc1, s1)
+                )
+                return hh + shard(y, "decode_activation"), (
+                    new.conv_x, new.conv_bc, new.ssd
+                )
+
+            h, (ncx, ncbc, nst) = jax.lax.scan(inner, h, (gp, cxg, cbcg, st))
+            hh = layers.apply_norm(cfg.norm, sp["attn_norm"], h)
+            a, sk, sv = attention.gqa_decode(sp["attn"], cfg, hh, sk, sv, pos, window=0)
+            h = h + shard(a, "decode_activation")
+            hh = layers.apply_norm(cfg.norm, sp["mlp_norm"], h)
+            h = h + shard(layers.mlp(sp["mlp"], hh, cfg.mlp), "decode_activation")
+            return h, (ncx, ncbc, nst, sk, sv)
+
+        x, (ncx, ncbc, nstate, nsk, nsv) = jax.lax.scan(
+            group_body, x,
+            (stacked, conv_x_g, conv_bc_g, state_g, cache.shared_k, cache.shared_v),
+        )
+        cache = cache._replace(
+            ssm_conv_x=ncx.reshape(cache.ssm_conv_x.shape),
+            ssm_conv_bc=ncbc.reshape(cache.ssm_conv_bc.shape),
+            ssm_state=nstate.reshape(cache.ssm_state.shape),
+            shared_k=nsk,
+            shared_v=nsv,
+        )
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _lm_logits(cfg, params, x)
+    cache = cache._replace(position=cache.position + 1)
+    return shard(logits, "decode_logits"), cache
+
+
+def _decode_step_pattern_ring(
+    cfg: ArchConfig, params: Dict, cache: Cache, x, pos, shard: ShardFn
+) -> Tuple[jnp.ndarray, Cache]:
+    """Decode with ring buffers on windowed layers.
+
+    Layers are regrouped statically: local (windowed) layers run in scans
+    over their ring caches; global layers (full caches) are interleaved at
+    their original positions. For uniform-window archs (starcoder2,
+    mixtral) there are no global layers and this is a single scan."""
+    import numpy as np
+
+    local_idx, glob_idx = _pattern_split(cfg)
+    stacked = params["layers"]
+
+    def take(tree, idx):
+        arr = np.asarray(idx)
+        return jax.tree_util.tree_map(lambda a: a[arr], tree)
+
+    def run_local_scan(h, lp_stack, kc, vc):
+        def body(hh, xs):
+            lp, k1, v1 = xs
+            hn = layers.apply_norm(cfg.norm, lp["attn_norm"], hh)
+            a, k1, v1 = attention.gqa_decode(
+                lp["attn"], cfg, hn, k1, v1, pos, window=0,
+                cache_pos=pos, ring=True,
+            )
+            hh = hh + shard(a, "decode_activation")
+            hn = layers.apply_norm(cfg.norm, lp["mlp_norm"], hh)
+            if cfg.moe is not None:
+                mo, _ = moe.moe_forward(lp["moe"], cfg, hn, shard=shard)
+            else:
+                mo = layers.mlp(lp["mlp"], hn, cfg.mlp)
+            hh = hh + shard(mo, "decode_activation")
+            return hh, (k1, v1)
+
+        return jax.lax.scan(body, h, (lp_stack, kc, vc))
+
+    def run_global_one(h, lp, kc, vc):
+        hn = layers.apply_norm(cfg.norm, lp["attn_norm"], h)
+        a, kc, vc = attention.gqa_decode(
+            lp["attn"], cfg, hn, kc, vc, pos, window=0, cache_pos=pos,
+        )
+        h = h + shard(a, "decode_activation")
+        hn = layers.apply_norm(cfg.norm, lp["mlp_norm"], h)
+        if cfg.moe is not None:
+            mo, _ = moe.moe_forward(lp["moe"], cfg, hn, shard=shard)
+        else:
+            mo = layers.mlp(lp["mlp"], hn, cfg.mlp)
+        h = h + shard(mo, "decode_activation")
+        return h, kc, vc
+
+    # walk layers in original order as runs of locals broken by globals
+    h = x
+    new_local_k = []
+    new_local_v = []
+    new_glob_k = []
+    new_glob_v = []
+    li = 0  # cursor into local cache stack
+    gi = 0
+    i = 0
+    nl = len(local_idx)
+    while i < cfg.num_layers:
+        # contiguous run of local layers
+        run = 0
+        while i + run < cfg.num_layers and (i + run) in set(local_idx):
+            run += 1
+        if run:
+            sl = slice(li, li + run)
+            idxs = list(range(i, i + run))
+            h, (nk, nv) = run_local_scan(
+                h, take(stacked, idxs),
+                cache.local_k[li : li + run], cache.local_v[li : li + run],
+            )
+            new_local_k.append(nk)
+            new_local_v.append(nv)
+            li += run
+            i += run
+        if i < cfg.num_layers:  # a global layer
+            lp = jax.tree_util.tree_map(lambda a: a[i], stacked)
+            h, nk, nv = run_global_one(
+                h, lp, cache.attn_k[gi], cache.attn_v[gi]
+            )
+            new_glob_k.append(nk[None])
+            new_glob_v.append(nv[None])
+            gi += 1
+            i += 1
+
+    cache = cache._replace(
+        local_k=jnp.concatenate(new_local_k, axis=0),
+        local_v=jnp.concatenate(new_local_v, axis=0),
+        attn_k=jnp.concatenate(new_glob_k, axis=0) if new_glob_k else cache.attn_k,
+        attn_v=jnp.concatenate(new_glob_v, axis=0) if new_glob_v else cache.attn_v,
+        position=cache.position + 1,
+    )
+    h = layers.apply_norm(cfg.norm, params["final_norm"], h)
+    logits = _lm_logits(cfg, params, h)
+    return shard(logits, "decode_logits"), cache
+
+
+# ===========================================================================
+# Prefill: process a full prompt, return cache ready for decode
+# ===========================================================================
+
+
+def prefill(
+    cfg: ArchConfig,
+    params: Dict,
+    tokens: jnp.ndarray,  # (B, S)
+    max_len: int,
+    *,
+    positions: Optional[jnp.ndarray] = None,
+    frontend_embeds: Optional[jnp.ndarray] = None,
+    encoder_tokens: Optional[jnp.ndarray] = None,
+    shard: ShardFn = _no_shard,
+) -> Tuple[jnp.ndarray, Cache]:
+    """Returns (last-position logits (B, V), populated cache)."""
+    b, s = tokens.shape
+    cache = init_cache(cfg, b, max_len)
+    x = _embed_tokens(cfg, params, tokens)
+    memory = None
+    if encoder_tokens is not None:
+        memory = _run_encoder(cfg, params, encoder_tokens.astype(x.dtype), shard)
+    if frontend_embeds is not None and encoder_tokens is None:
+        x = jnp.concatenate([frontend_embeds.astype(x.dtype), x], axis=1)
+        s = x.shape[1]
+    x = shard(x, "activation")
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+
+    if cfg.arch_type in ("dense", "moe", "vlm", "audio"):
+        windows = _window_array(cfg)
+
+        def body(h, xs):
+            lp, win = xs
+            hh = layers.apply_norm(cfg.norm, lp["attn_norm"], h)
+            if cfg.attention == "mla":
+                a = attention.mla_forward(lp["attn"], cfg, hh, positions)
+                c_kv, k_rope = attention.mla_prefill_cache(lp["attn"], cfg, hh, positions)
+                new_kv = (c_kv, k_rope)
+            else:
+                a = attention.gqa_forward(lp["attn"], cfg, hh, positions, window=win)
+                new_kv = attention.gqa_prefill_kv(lp["attn"], cfg, hh, positions)
+            h = h + shard(a, "activation")
+            ck = cv = None
+            if cfg.cross_attention:
+                hh = layers.apply_norm(cfg.norm, lp["cross_norm"], h)
+                qpos = positions if positions.ndim == 1 else positions[0, 0]
+                cr = attention.gqa_forward(
+                    lp["cross"], cfg, hh, qpos, window=0, causal=False,
+                    kv_override=(memory, memory),
+                )
+                h = h + shard(cr, "activation")
+                kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+                f = memory.shape[1]
+                ck = (memory @ lp["cross"]["w_k"]).reshape(b, f, kvh, hd)
+                cv = (memory @ lp["cross"]["w_v"]).reshape(b, f, kvh, hd)
+            hh = layers.apply_norm(cfg.norm, lp["mlp_norm"], h)
+            if cfg.moe is not None:
+                m, _ = moe.moe_forward(lp["moe"], cfg, hh, shard=shard)
+            else:
+                m = layers.mlp(lp["mlp"], hh, cfg.mlp)
+            h = h + shard(m, "activation")
+            return h, (new_kv, ck, cv)
+
+        x, (new_kvs, cks, cvs) = jax.lax.scan(body, x, (params["layers"], windows))
+        if cfg.attention == "mla":
+            c_all, rope_all = new_kvs  # (L, B, S, R), (L, B, S, P)
+            cache = cache._replace(
+                mla_c=jax.lax.dynamic_update_slice(
+                    cache.mla_c, c_all.astype(cache.mla_c.dtype), (0, 0, 0, 0)
+                ),
+                mla_rope=jax.lax.dynamic_update_slice(
+                    cache.mla_rope, rope_all.astype(cache.mla_rope.dtype), (0, 0, 0, 0)
+                ),
+            )
+        else:
+            k_all, v_all = new_kvs  # (L, B, S, KV, D)
+            cache = cache._replace(
+                attn_k=jax.lax.dynamic_update_slice(
+                    cache.attn_k, k_all.astype(cache.attn_k.dtype), (0,) * 5
+                ),
+                attn_v=jax.lax.dynamic_update_slice(
+                    cache.attn_v, v_all.astype(cache.attn_v.dtype), (0,) * 5
+                ),
+            )
+        if cfg.cross_attention:
+            cache = cache._replace(
+                cross_k=cks.astype(_dtype(cfg)), cross_v=cvs.astype(_dtype(cfg))
+            )
+
+    elif cfg.arch_type == "ssm":
+
+        def body(h, lp):
+            hh = layers.apply_norm(cfg.norm, lp["norm"], h)
+            y, st = ssm.ssm_forward(lp["ssm"], cfg, hh)
+            return h + shard(y, "activation"), (st.conv_x, st.conv_bc, st.ssd)
+
+        x, (cxs, cbcs, states) = jax.lax.scan(body, x, params["layers"])
+        cache = cache._replace(
+            ssm_conv_x=cxs, ssm_conv_bc=cbcs, ssm_state=states
+        )
+
+    elif cfg.arch_type == "hybrid":
+        k = cfg.shared_attn_every
+        g = cfg.num_layers // k
+        stacked = jax.tree_util.tree_map(
+            lambda a: a.reshape((g, k) + a.shape[1:]), params["layers"]
+        )
+        sp = params["shared_attn"]
+
+        def group_body(h, gp):
+            def inner(hh, lp):
+                hn = layers.apply_norm(cfg.norm, lp["norm"], hh)
+                y, st = ssm.ssm_forward(lp["ssm"], cfg, hn)
+                return hh + shard(y, "activation"), (
+                    st.conv_x, st.conv_bc, st.ssd
+                )
+
+            h, (cxs, cbcs, states) = jax.lax.scan(inner, h, gp)
+            hh = layers.apply_norm(cfg.norm, sp["attn_norm"], h)
+            a = attention.gqa_forward(sp["attn"], cfg, hh, positions, window=0)
+            sk, sv = attention.gqa_prefill_kv(sp["attn"], cfg, hh, positions)
+            h = h + shard(a, "activation")
+            hh = layers.apply_norm(cfg.norm, sp["mlp_norm"], h)
+            h = h + shard(layers.mlp(sp["mlp"], hh, cfg.mlp), "activation")
+            return h, (cxs, cbcs, states, sk, sv)
+
+        x, (cxs, cbcs, states, sks, svs) = jax.lax.scan(group_body, x, stacked)
+        cache = cache._replace(
+            ssm_conv_x=cxs.reshape((cfg.num_layers,) + cxs.shape[2:]),
+            ssm_conv_bc=cbcs.reshape((cfg.num_layers,) + cbcs.shape[2:]),
+            ssm_state=states.reshape((cfg.num_layers,) + states.shape[2:]),
+            shared_k=jax.lax.dynamic_update_slice(
+                cache.shared_k, sks.astype(cache.shared_k.dtype), (0,) * 5
+            ),
+            shared_v=jax.lax.dynamic_update_slice(
+                cache.shared_v, svs.astype(cache.shared_v.dtype), (0,) * 5
+            ),
+        )
+    else:
+        raise ValueError(cfg.arch_type)
+
+    x = layers.apply_norm(cfg.norm, params["final_norm"], x)
+    logits = _lm_logits(cfg, params, x[:, -1])
+    cache = cache._replace(position=jnp.full((b,), s, jnp.int32))
+    return logits, cache

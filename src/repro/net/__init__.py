@@ -1,0 +1,3 @@
+"""Network substrate: calibrated link models + simulated transport."""
+
+from repro.net import links, transport  # noqa: F401

@@ -1,0 +1,72 @@
+"""Simulated transport of pytrees across a link, with byte accounting.
+
+``Transport`` moves real JAX pytrees between two logical endpoints while
+charging simulated wall-clock time to a ``sim.clock.SimClock``. The data
+actually moves (it is the same host), so executed simulations produce
+*bit-exact tracker output* while the clock reflects the modeled network —
+this is how sim/runtime.py runs the paper's experiments faithfully on one
+machine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.offload import Link, WrapperModel
+from repro.core.stages import pytree_nbytes
+
+
+@dataclasses.dataclass
+class TransferRecord:
+    nbytes: int
+    seconds: float
+    direction: str  # "up" | "down"
+
+
+class Transport:
+    """A link between client and server endpoints with an RNG for jitter."""
+
+    def __init__(
+        self,
+        link: Link,
+        wrapper: Optional[WrapperModel] = None,
+        seed: int = 0,
+    ):
+        self.link = link
+        self.wrapper = wrapper
+        self.rng = np.random.default_rng(seed)
+        self.log: list[TransferRecord] = []
+
+    def rpc_envelope_time(self) -> float:
+        """Request + response wire latency for one remote invocation."""
+        t = 0.0
+        for _ in range(2):
+            t += max(
+                0.0,
+                float(self.rng.normal(self.link.latency, self.link.jitter))
+                if self.link.jitter > 0
+                else self.link.latency,
+            )
+        if self.wrapper is not None:
+            t += 2 * self.wrapper.call_overhead
+        return t
+
+    def payload_time(self, tree: Any, direction: str = "up") -> float:
+        """Time to ship a pytree payload (serialization + wire)."""
+        nbytes = pytree_nbytes(tree)
+        t = nbytes / self.link.bandwidth
+        if self.wrapper is not None:
+            t += 2 * nbytes / self.wrapper.serialization_bandwidth
+        self.log.append(TransferRecord(nbytes, t, direction))
+        return t
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(r.nbytes for r in self.log)
+
+    @property
+    def total_seconds(self) -> float:
+        return sum(r.seconds for r in self.log)

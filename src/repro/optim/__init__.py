@@ -1,0 +1,3 @@
+"""Optimizers (pure JAX)."""
+
+from repro.optim import adamw  # noqa: F401

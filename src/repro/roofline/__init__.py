@@ -1,0 +1,3 @@
+"""Roofline analysis of compiled dry-run artifacts."""
+
+from repro.roofline import analysis  # noqa: F401

@@ -1,0 +1,241 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch, shape, mesh), all in seconds. The compiled SPMD
+module is a per-device program, so all byte/FLOP figures are PER DEVICE
+and the terms divide by per-chip peaks only:
+
+  compute    = dev_FLOPs  / PEAK_FLOPS
+  memory     = dev_bytes  / HBM_BW
+  collective = dev_coll_bytes / ICI_BW
+
+Caveat discovered during bring-up (see EXPERIMENTS.md §Dry-run):
+``compiled.cost_analysis()`` on XLA:CPU counts every while-loop body ONCE
+— a 54-layer scan contributes a single layer — and is therefore useless
+for scanned models. The numbers here come from ``hlo_cost.analyze_hlo``,
+which walks the optimized HLO call graph and scales loop bodies by their
+``known_trip_count``. FLOPs count dot ops exactly; memory bytes are an
+HBM-traffic estimate (operands + outputs of materialized ops — an upper
+bound that double-counts values consumed by several ops); collective
+bytes sum per-device output shapes of the five collective op kinds. The
+raw cost_analysis() dict is preserved in each dry-run JSON for reference.
+
+Also reported: MODEL_FLOPS = 6·N·D (train) or 2·N·D (inference) with
+N = active params, and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+# --- TPU v5e hardware constants (per chip) ---
+PEAK_FLOPS = 197e12  # bf16
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'f32[128,256]' -> bytes. Tuples handled by caller via findall."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _iter_computations(hlo: str):
+    """Yield (computation_name, body_lines)."""
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        m = re.match(r"^(%?[\w\.\-]+)\s*(\([^)]*\))?\s*->.*{$", stripped)
+        if stripped.endswith("{") and ("(" in stripped):
+            if cur_name is not None:
+                yield cur_name, cur_lines
+            cur_name = stripped.split()[0].lstrip("%")
+            cur_lines = []
+        elif stripped == "}" or stripped.startswith("} "):
+            if cur_name is not None:
+                yield cur_name, cur_lines
+                cur_name, cur_lines = None, []
+        elif cur_name is not None:
+            cur_lines.append(stripped)
+    if cur_name is not None:
+        yield cur_name, cur_lines
+
+
+def _while_trip_counts(hlo: str) -> Dict[str, int]:
+    """Map while-body computation name -> trip count.
+
+    XLA annotates optimized while loops with
+    ``backend_config={"known_trip_count":{"n":"54"}}`` (or exposes an
+    induction-variable bound); fall back to 1 when unknown."""
+    trips: Dict[str, int] = {}
+    for m in re.finditer(
+        r"while\([^)]*\).*?body=%?([\w\.\-]+).*?known_trip_count[^\d]*(\d+)",
+        hlo,
+    ):
+        trips[m.group(1)] = int(m.group(2))
+    # also catch trip_count in comments: while(...) /*trip_count=54*/
+    for m in re.finditer(
+        r"body=%?([\w\.\-]+)[^\n]*?trip_count[=\"':\s]+(\d+)", hlo
+    ):
+        trips.setdefault(m.group(1), int(m.group(2)))
+    return trips
+
+
+def collective_bytes(hlo: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op, scaling by loop trips."""
+    trips = _while_trip_counts(hlo)
+    by_kind: Dict[str, int] = {k: 0 for k in _COLLECTIVE_KINDS}
+    for comp_name, lines in _iter_computations(hlo):
+        scale = trips.get(comp_name, 1)
+        for line in lines:
+            for kind in _COLLECTIVE_KINDS:
+                # match '= TYPE kind(' and fused variants 'kind-start('
+                if re.search(rf"=\s*[^=]*\b{kind}(-start)?\(", line):
+                    # operand shapes: the output shape annotation right
+                    # after '=' covers bytes moved (per-device output)
+                    m = re.match(r"^\S+\s*=\s*(\([^)]*\)|\S+)\s", line)
+                    if m:
+                        by_kind[kind] += _shape_bytes(m.group(1)) * scale
+                    break
+    return CollectiveStats(by_kind)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, int]
+    model_flops: float
+    bytes_per_chip: Optional[float] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS  # per-device flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW  # per-device HBM traffic
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW  # per-device link traffic
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips  # global compiled flops
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-model step latency: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "hlo_flops": self.hlo_flops,
+            "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": self.coll_bytes,
+            "coll_by_kind": self.coll_by_kind,
+            "model_flops": self.model_flops,
+            "useful_ratio": self.useful_ratio,
+            "bytes_per_chip": self.bytes_per_chip,
+        }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """6·N_active·D for training, 2·N_active·D for inference steps."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def analyze(
+    cfg,
+    shape,
+    mesh_name: str,
+    chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    memory_stats: Optional[Dict] = None,
+) -> RooflineReport:
+    from repro.roofline import hlo_cost
+
+    walked = hlo_cost.analyze_hlo(hlo_text)
+    return RooflineReport(
+        arch=cfg.name,
+        shape=shape.name,
+        mesh=mesh_name,
+        chips=chips,
+        hlo_flops=walked.flops,
+        hlo_bytes=walked.mem_bytes,
+        coll_bytes=walked.coll_bytes,
+        coll_by_kind={k: int(v) for k, v in walked.coll_by_kind.items()},
+        model_flops=model_flops_for(cfg, shape),
+        bytes_per_chip=(memory_stats or {}).get("bytes_per_chip"),
+    )

@@ -1,0 +1,4 @@
+"""Serving runtime: batched engine, continuous batching, tiered edge
+placement."""
+
+from repro.serving import continuous, edge, engine  # noqa: F401

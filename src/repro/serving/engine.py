@@ -1,0 +1,102 @@
+"""Batched serving engine: prefill + decode loop over request batches.
+
+The serial dependency the paper analyzes for frames (Fig. 3 category A)
+is exactly the autoregressive decode dependency: token t+1 cannot be
+issued before token t returns. The engine therefore exposes the same
+stage structure the hand tracker does, and ``serving/edge.py`` applies
+the identical offload machinery to it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray  # (P,) int32
+    max_new_tokens: int = 32
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray  # (N,) generated ids
+    prefill_len: int
+
+
+def _pad_prompts(prompts: List[np.ndarray], pad_id: int = 0):
+    maxlen = max(p.shape[0] for p in prompts)
+    batch = np.full((len(prompts), maxlen), pad_id, np.int32)
+    for i, p in enumerate(prompts):
+        batch[i, maxlen - p.shape[0] :] = p  # left-pad: ends align
+    return jnp.asarray(batch), maxlen
+
+
+class Engine:
+    """Static-batch serving engine (continuous batching is a planned
+    extension; the dry-run's decode_32k shape models the steady state of
+    a full 128-sequence batch)."""
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        params,
+        max_len: int = 512,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+
+        self._prefill = jax.jit(
+            lambda p, toks: transformer.prefill(cfg, p, toks, max_len=max_len)
+        )
+        self._decode = jax.jit(
+            lambda p, cache, toks: transformer.decode_step(cfg, p, cache, toks)
+        )
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> List[Completion]:
+        prompts = [r.prompt for r in requests]
+        tokens, plen = _pad_prompts(prompts)
+        logits, cache = self._prefill(self.params, tokens)
+        steps = max(r.max_new_tokens for r in requests)
+        out = []
+        cur = self._sample(logits)
+        generated = [cur]
+        for _ in range(steps - 1):
+            step_logits, cache = self._decode(
+                self.params, cache, cur[:, None]
+            )
+            cur = self._sample(step_logits[:, 0])
+            generated.append(cur)
+        gen = np.asarray(jnp.stack(generated, axis=1))  # (B, steps)
+        for i, r in enumerate(requests):
+            out.append(
+                Completion(
+                    uid=r.uid,
+                    tokens=gen[i, : r.max_new_tokens],
+                    prefill_len=plen,
+                )
+            )
+        return out

@@ -1,0 +1,3 @@
+"""PartitionSpec rules for params, inputs, activations and caches."""
+
+from repro.sharding import specs  # noqa: F401

@@ -1,0 +1,3 @@
+"""Deployment simulation: hardware tiers, real-time clock, edge runtime."""
+
+from repro.sim import clock, hardware, runtime  # noqa: F401

@@ -1,0 +1,130 @@
+"""Device-tier models calibrated against the paper's measurements.
+
+This container has no GTX 1080M, no GeForce 670M and no TPU, so absolute
+tier throughputs are *calibrated anchors*, not measurements: we fix each
+tier's effective FLOP/s so that the NATIVE (unwrapped, local) tracker hits
+the paper's reported baseline framerates — server > 40 fps, laptop
+~13 fps (Fig. 4) — for the paper-scale workload. Everything downstream
+(wrapper overheads, Single- vs Multi-Step, Forced vs Auto, Ethernet vs
+Wi-Fi) is then a *prediction* of the cost model, validated against the
+paper's reported orderings in tests/test_paper_claims.py. The two fps
+anchors are the only fitted quantities; see DESIGN.md §6.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import pso, tracker
+from repro.core.camera import Camera
+from repro.core.offload import Environment, Link, Policy, Tier, WrapperModel
+from repro.core.stages import StagedComputation
+from repro.core.wrapper import paper_wrapper
+from repro.net import links
+
+# ---------------------------------------------------------------------------
+# The paper-scale workload
+# ---------------------------------------------------------------------------
+
+# Hypotheses are rendered/scored at a reduced working resolution; the
+# sensor frame that crosses the network is 320x240 RGBD:
+#   depth f32 320*240*4 + RGB24 320*240*3 = 537,600 bytes.
+PAPER_FRAME_BYTES = 320 * 240 * 4 + 320 * 240 * 3
+
+PAPER_TRACKER_CFG = tracker.TrackerConfig(
+    camera=Camera(),  # 128x128 working resolution
+    pso=pso.PSOConfig(num_particles=64, num_generations=30),
+)
+
+# The paper's reported native baselines (Fig. 4).
+SERVER_NATIVE_FPS = 42.0
+LAPTOP_NATIVE_FPS = 13.0
+
+
+def paper_staged() -> StagedComputation:
+    return tracker.build_staged(PAPER_TRACKER_CFG, frame_nbytes=PAPER_FRAME_BYTES)
+
+
+def calibrate_tier(
+    name: str,
+    native_fps: float,
+    comp: StagedComputation,
+    scalar_flops: float = 40e9,
+    dispatch_overhead: float = 80e-6,
+) -> Tier:
+    """Solve the tier's effective accelerator FLOP/s from its native fps.
+
+    native loop time = sum_i [par_i/accel + ser_i/scalar + dispatch]
+    =>  accel = (sum par_i) / (1/fps - sum(ser_i/scalar + dispatch))
+    """
+    par = sum(s.flops * s.parallel_fraction for s in comp.stages)
+    fixed = sum(
+        (s.flops * (1.0 - s.parallel_fraction)) / scalar_flops
+        + dispatch_overhead
+        for s in comp.stages
+    )
+    budget = 1.0 / native_fps - fixed
+    if budget <= 0:
+        raise ValueError(f"{name}: scalar fraction alone exceeds 1/fps")
+    return Tier(
+        name=name,
+        accel_flops=par / budget,
+        scalar_flops=scalar_flops,
+        dispatch_overhead=dispatch_overhead,
+    )
+
+
+def paper_tiers() -> Dict[str, Tier]:
+    comp = paper_staged()
+    return {
+        "server": calibrate_tier("server_gtx1080m", SERVER_NATIVE_FPS, comp),
+        "laptop": calibrate_tier(
+            "laptop_gf670m", LAPTOP_NATIVE_FPS, comp, scalar_flops=20e9
+        ),
+    }
+
+
+# TPU v5e: 197 TFLOP/s bf16 peak; this VPU-bound f32 workload lands well
+# below MXU peak — 8% effective is a conservative planning number.
+TPU_V5E = Tier(
+    name="tpu_v5e",
+    accel_flops=197e12 * 0.08,
+    scalar_flops=60e9,
+    dispatch_overhead=20e-6,
+)
+
+# A GPU-less thin client (Raspberry-Pi-class): the *Forced* scenario's
+# target device — "a machine without a GPU is possible to run the
+# real-time 3D hand tracking with 1/3 of the desired framerate".
+THIN_CLIENT_NO_GPU = Tier(
+    name="thin_client",
+    accel_flops=8e9,
+    scalar_flops=8e9,
+    dispatch_overhead=100e-6,
+    has_accelerator=False,
+)
+
+
+def paper_environment(
+    network: str = "gigabit_ethernet", wrapped: bool = True
+) -> Environment:
+    """laptop (client) -> server over the requested network."""
+    tiers = paper_tiers()
+    return Environment(
+        client=tiers["laptop"],
+        server=tiers["server"],
+        link=links.ALL_LINKS[network],
+        wrapper=paper_wrapper(),
+        wrapped=wrapped,
+    )
+
+
+def edge_tpu_environment(client_tier: Tier = THIN_CLIENT_NO_GPU) -> Environment:
+    """The production analogue: thin client -> TPU pod over 5G edge."""
+    return Environment(
+        client=client_tier,
+        server=TPU_V5E,
+        link=links.FIVE_G_EDGE,
+        wrapper=WrapperModel(call_overhead=0.2e-3, serialization_bandwidth=2e9),
+        wrapped=True,
+    )

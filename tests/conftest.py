@@ -1,0 +1,5 @@
+import os
+
+# Tests must see the real single CPU device; the 512-device override is
+# exclusively dryrun.py's (the mandate forbids setting it globally).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")

@@ -1,0 +1,39 @@
+"""Fig. 3 frame-drop accounting."""
+
+import pytest
+
+from repro.sim.clock import FRAME_PERIOD, FrameLoop, LoopStats
+
+
+def test_fast_loop_processes_every_frame():
+    loop = FrameLoop()
+    stats = loop.run(lambda i, gap: 0.010, 90)
+    assert stats.dropped == 0
+    assert stats.mean_gap == 1.0
+    assert stats.realtime
+
+
+def test_paper_150ms_example_drops_two_of_three():
+    """Paper Fig. 3A: 'for a hypothetical slower 150 ms processing loop
+    time, the system must skip processing two consecutive frames for each
+    received frame' — wait: 150 ms spans 4.5 periods; the tracker
+    processes every 5th frame on average."""
+    loop = FrameLoop()
+    stats = loop.run(lambda i, gap: 0.150, 300)
+    assert stats.mean_gap == pytest.approx(5.0, abs=0.6)
+    assert stats.drop_rate > 0.7
+    assert not stats.realtime
+
+
+def test_33ms_budget_boundary():
+    loop = FrameLoop()
+    stats = loop.run(lambda i, gap: FRAME_PERIOD * 0.999, 100)
+    assert stats.dropped == 0
+
+
+def test_drops_scale_with_loop_time():
+    loop = FrameLoop()
+    slow = loop.run(lambda i, gap: 0.100, 200)
+    slower = loop.run(lambda i, gap: 0.200, 200)
+    assert slower.dropped > slow.dropped
+    assert slower.mean_gap > slow.mean_gap

@@ -1,0 +1,81 @@
+"""Prefill+decode must equal the parallel forward — validates every cache
+type: GQA (windowed), MLA absorbed decode, SSD recurrence, the hybrid
+shared-attention cache, M-RoPE and enc-dec cross-attention."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import multimodal, transformer
+
+TEXT_ARCHS = [
+    "gemma-2b", "gemma3-4b", "mamba2-370m", "minicpm3-4b", "mixtral-8x7b",
+    "qwen3-moe-30b-a3b", "starcoder2-3b", "zamba2-2.7b",
+]
+
+
+def _roundtrip_error(cfg, batch_builder, S=20):
+    key = jax.random.PRNGKey(1)
+    B = 2
+    params = transformer.init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    full_batch, prefill_kwargs, decode_pos = batch_builder(cfg, tokens)
+    logits_full, _ = transformer.forward(cfg, params, full_batch)
+    P = S // 2
+    offset = logits_full.shape[1] - S  # frontend positions, if any
+    lp, cache = transformer.prefill(
+        cfg, params, tokens[:, :P], max_len=offset + S + 4, **prefill_kwargs
+    )
+    errs = [float(jnp.max(jnp.abs(lp - logits_full[:, offset + P - 1])))]
+    for t in range(P, S):
+        pos = decode_pos(t) if decode_pos else None
+        ld, cache = transformer.decode_step(
+            cfg, params, cache, tokens[:, t : t + 1], positions=pos
+        )
+        errs.append(float(jnp.max(jnp.abs(ld[:, 0] - logits_full[:, offset + t]))))
+    return max(errs)
+
+
+def _text_builder(cfg, tokens):
+    return {"tokens": tokens}, {}, None
+
+
+@pytest.mark.parametrize("arch", TEXT_ARCHS)
+def test_text_arch_decode_matches_forward(arch):
+    cfg = registry.get(arch).reduced()
+    assert _roundtrip_error(cfg, _text_builder) < 5e-5
+
+
+def test_qwen2vl_mrope_decode_matches_forward():
+    cfg = registry.get("qwen2-vl-7b").reduced()
+    S, B = 16, 2
+    F = cfg.frontend_tokens
+    fe = multimodal.fake_frontend_embeds(cfg, B)
+    pos_full = multimodal.mrope_positions(B, S, image_grid=(4, 4))
+
+    def builder(cfg, tokens):
+        batch = {"tokens": tokens, "positions": pos_full, "frontend_embeds": fe}
+        prefill_kwargs = {
+            "positions": pos_full[:, :, : F + S // 2],
+            "frontend_embeds": fe,
+        }
+        decode_pos = lambda t: pos_full[:, :, F + t : F + t + 1]
+        return batch, prefill_kwargs, decode_pos
+
+    assert _roundtrip_error(cfg, builder, S=S) < 5e-5
+
+
+def test_seamless_encdec_decode_matches_forward():
+    cfg = registry.get("seamless-m4t-large-v2").reduced()
+    B = 2
+    enc = multimodal.fake_frontend_embeds(cfg, B)
+
+    def builder(cfg, tokens):
+        return (
+            {"tokens": tokens, "encoder_tokens": enc},
+            {"encoder_tokens": enc},
+            None,
+        )
+
+    assert _roundtrip_error(cfg, builder) < 5e-5

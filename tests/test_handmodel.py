@@ -1,0 +1,86 @@
+"""Kinematics invariants of the 27-DoF hand model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import handmodel as hm
+
+finite_floats = st.floats(-1.0, 1.0, allow_nan=False, width=32)
+
+
+@st.composite
+def configurations(draw):
+    pos = [draw(st.floats(-0.3, 0.3)) for _ in range(3)]
+    pos[2] = draw(st.floats(0.3, 1.0))  # in front of the camera
+    quat = [draw(st.floats(-1.0, 1.0)) for _ in range(4)]
+    if all(abs(q) < 1e-3 for q in quat):
+        quat = [1.0, 0.0, 0.0, 0.0]
+    angles = [draw(st.floats(-2.0, 2.5)) for _ in range(20)]
+    return jnp.asarray(pos + quat + angles, dtype=jnp.float32)
+
+
+def test_sphere_count_and_padding():
+    h = hm.default_pose()
+    c, r = hm.hand_spheres_world(h)
+    assert c.shape == (hm.NUM_SPHERES, 3)
+    assert r.shape == (hm.NUM_SPHERES,)
+    assert hm.NUM_SPHERES % 8 == 0
+    # padding spheres have zero radius
+    assert float(r[hm.NUM_SPHERES_RAW:].max(initial=0.0)) == 0.0
+    assert float(r[: hm.NUM_SPHERES_RAW].min()) > 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(configurations())
+def test_rigid_transform_preserves_distances(h):
+    """Rotation+translation must not change inter-sphere distances."""
+    angles = h[hm.ANGLES_SLICE]
+    local_c, _ = hm.hand_spheres_local(angles)
+    world_c, _ = hm.hand_spheres_world(h)
+    d_local = jnp.linalg.norm(local_c[0] - local_c[10])
+    d_world = jnp.linalg.norm(world_c[0] - world_c[10])
+    np.testing.assert_allclose(float(d_local), float(d_world), atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(configurations())
+def test_quaternion_normalization_invariance(h):
+    """Scaling the quaternion must not change geometry (normalized)."""
+    h2 = h.at[hm.QUAT_SLICE].multiply(2.5)
+    c1, _ = hm.hand_spheres_world(h)
+    c2, _ = hm.hand_spheres_world(h2)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+
+
+def test_angle_bounds_clip():
+    """Angles beyond anatomical limits are clipped: geometry saturates."""
+    h = hm.default_pose()
+    h_extreme = h.at[hm.ANGLES_SLICE].set(100.0)
+    h_limit = h.at[hm.ANGLES_SLICE].set(hm.angle_upper_bounds())
+    c1, _ = hm.hand_spheres_world(h_extreme)
+    c2, _ = hm.hand_spheres_world(h_limit)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-5)
+
+
+def test_bounds_contain_center():
+    h = hm.default_pose()
+    lo = hm.parameter_lower_bounds(h)
+    hi = hm.parameter_upper_bounds(h)
+    assert bool(jnp.all(lo <= h)) and bool(jnp.all(h <= hi))
+
+
+def test_fingers_curl_towards_palm():
+    """Flexing all fingers moves fingertips towards -z (palm side)."""
+    open_h = hm.default_pose()
+    curled = open_h.at[hm.ANGLES_SLICE].set(
+        jnp.tile(jnp.asarray([0.0, 1.2, 1.2, 1.0]), 5)
+    )
+    c_open, _ = hm.hand_spheres_local(open_h[hm.ANGLES_SLICE])
+    c_curl, _ = hm.hand_spheres_local(curled[hm.ANGLES_SLICE])
+    spheres_per_finger = hm.NUM_BONES_PER_FINGER * hm.SPHERES_PER_BONE + 1
+    # index fingertip: palm spheres + thumb block + index bones
+    tip = hm.NUM_PALM_SPHERES + 2 * spheres_per_finger - 1
+    assert float(c_curl[tip, 2]) < float(c_open[tip, 2])

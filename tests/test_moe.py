@@ -1,0 +1,69 @@
+"""MoE router + dispatch invariants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import moe
+
+
+def _cfg(impl="dense", capacity=8.0):
+    cfg = registry.get("mixtral-8x7b").reduced()
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, impl=impl, capacity_factor=capacity)
+    )
+
+
+def test_dropping_matches_dense_when_capacity_ample():
+    """With capacity_factor high enough that nothing drops, the sorted
+    scatter dispatch computes exactly the dense top-k combine."""
+    cfg_dense = _cfg("dense")
+    cfg_drop = _cfg("dropping", capacity=16.0)
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg_dense)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg_dense.d_model))
+    y_dense, aux_d = moe.moe_forward(params, cfg_dense, x)
+    y_drop, aux_s = moe.moe_forward(params, cfg_drop, x)
+    np.testing.assert_allclose(
+        np.asarray(y_dense), np.asarray(y_drop), rtol=2e-4, atol=2e-5
+    )
+    np.testing.assert_allclose(float(aux_d), float(aux_s), rtol=1e-5)
+
+
+def test_capacity_drops_tokens_gracefully():
+    """With capacity 0+epsilon most tokens drop: output ~ 0 (residual
+    passthrough), never NaN."""
+    cfg = _cfg("dropping", capacity=0.01)
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y, aux = moe.moe_forward(params, cfg, x)
+    assert not bool(jnp.any(jnp.isnan(y)))
+    assert float(jnp.abs(y).mean()) < float(jnp.abs(x).mean())
+
+
+def test_router_aux_loss_uniform_is_one():
+    """Switch aux loss == 1.0 exactly for a perfectly uniform router (its
+    minimum); worse-balanced routers score higher."""
+    cfg = _cfg("dense")
+    m = cfg.moe
+    t, e = 4096, m.num_experts
+    key = jax.random.PRNGKey(0)
+    params = {"router": jnp.zeros((cfg.d_model, e))}  # uniform probs
+    x = jax.random.normal(key, (t, cfg.d_model))
+    gates, idx, aux = moe._router(params, m, x)
+    # uniform probs -> p_e = 1/E; f depends on top-1 tie-breaking but
+    # E * sum(f*p) = E * (1/E) * sum(f) = 1
+    assert float(aux) == pytest.approx(1.0, rel=1e-3)
+
+
+def test_gates_normalized():
+    cfg = _cfg("dense")
+    params = moe.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(2), (64, cfg.d_model))
+    gates, idx, aux = moe._router(params, cfg.moe, x)
+    np.testing.assert_allclose(
+        np.asarray(gates.sum(-1)), np.ones(64), rtol=1e-5
+    )

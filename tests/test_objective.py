@@ -1,0 +1,65 @@
+"""Properties of the paper's E_D objective (Eq. 2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import handmodel as hm
+from repro.core import objective as obj
+from repro.core.camera import BACKGROUND_DEPTH, Camera
+
+CAM = Camera(width=48, height=48, fx=45.0, fy=45.0, cx=23.5, cy=23.5)
+
+
+def test_perfect_hypothesis_scores_zero():
+    h = hm.default_pose(0.45)
+    d = obj.render_depth(h, CAM)
+    assert float(obj.objective(h, d, CAM)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_clamp_bounds_objective():
+    """E_D <= T by construction (mean of clamped values)."""
+    h = hm.default_pose(0.45)
+    d_far = jnp.full((CAM.height, CAM.width), BACKGROUND_DEPTH)
+    e = float(obj.objective(h, d_far, CAM))
+    assert 0.0 <= e <= obj.CLAMP_T + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.005, 0.08))
+def test_larger_offset_scores_worse(dx):
+    """Monotone degradation along a translation ray."""
+    h = hm.default_pose(0.45)
+    d = obj.render_depth(h, CAM)
+    mask = obj.bounding_box_mask(d, h[2])
+    e_small = float(obj.objective(h.at[0].add(dx / 2), d, CAM, mask))
+    e_large = float(obj.objective(h.at[0].add(dx * 2), d, CAM, mask))
+    e_true = float(obj.objective(h, d, CAM, mask))
+    assert e_true <= e_small <= e_large + 1e-4
+
+
+def test_sphere_depth_matches_analytic_center_ray():
+    """A sphere dead ahead: depth along the central ray = c_z - r."""
+    spheres = jnp.asarray([[0.0, 0.0, 0.5, 0.1]])
+    rays = jnp.asarray([[0.0, 0.0, 1.0]])
+    d = obj.sphere_depth(rays, spheres)
+    np.testing.assert_allclose(np.asarray(d), [0.4], atol=1e-6)
+
+
+def test_zero_radius_padding_never_hits():
+    spheres = jnp.asarray([[0.0, 0.0, 0.0, 0.0]])
+    rays = CAM.rays_flat()
+    d = obj.sphere_depth(rays, spheres)
+    assert float(d.min()) == BACKGROUND_DEPTH
+
+
+def test_bbox_mask_selects_hand_depth_band():
+    h = hm.default_pose(0.45)
+    d = obj.render_depth(h, CAM)
+    mask = obj.bounding_box_mask(d, h[2], half_width=0.25)
+    hand_pixels = d < BACKGROUND_DEPTH - 1
+    # every rendered hand pixel near the expected depth is inside B
+    assert bool(jnp.all(mask[hand_pixels]))
+    # far background is outside B
+    assert not bool(jnp.any(mask & (d > 5.0)))

@@ -1,0 +1,109 @@
+"""Offload placement engine: exact cost model properties."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import offload
+from repro.core.offload import Environment, Link, Policy, Tier, WrapperModel
+from repro.core.stages import CLIENT, SERVER, DataItem, Stage, StagedComputation
+
+
+def _comp(n_stages=4, frame_bytes=500_000, flops=5e9):
+    sources = (
+        DataItem("frame", frame_bytes, CLIENT),
+        DataItem("h_prev", 108, CLIENT),
+    )
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 20_000)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=flops / n_stages,
+                inputs=(prev, "h_prev") if i == 0 else (prev,),
+                outputs=(out,),
+                parallel_fraction=0.95,
+            )
+        )
+        prev = out.name
+    return StagedComputation("test", sources, tuple(stages), (prev,))
+
+
+def _env(lat=0.3e-3, bw=117e6, fast=2e12, slow=0.3e12):
+    return Environment(
+        client=Tier("client", slow, 30e9),
+        server=Tier("server", fast, 60e9),
+        link=Link("l", bw, lat),
+        wrapper=WrapperModel(),
+    )
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.floats(1e-4, 50e-3),  # latency
+    st.floats(5e6, 200e6),  # bandwidth
+    st.floats(0.5e12, 5e12),  # server speed
+    st.floats(0.05e12, 1e12),  # client speed
+)
+def test_auto_is_optimal(lat, bw, fast, slow):
+    """AUTO (exhaustive oracle) never loses to LOCAL or FORCED."""
+    comp = _comp()
+    env = _env(lat, bw, fast, slow)
+    t_auto = offload.plan(comp, env, Policy.AUTO).total_time
+    t_local = offload.plan(comp, env, Policy.LOCAL).total_time
+    t_forced = offload.plan(comp, env, Policy.FORCED).total_time
+    assert t_auto <= t_local + 1e-12
+    assert t_auto <= t_forced + 1e-12
+
+
+def test_single_step_uplink_is_sources_only():
+    """Fused single-step ships exactly the sources up, results down."""
+    comp = _comp().fused()
+    env = _env()
+    rep = offload.plan(comp, env, Policy.FORCED)
+    assert rep.uplink_bytes == 500_000 + 108
+    assert rep.downlink_bytes == 20_000
+
+
+def test_multi_step_pays_more_rpc_envelopes_on_high_latency():
+    comp = _comp()
+    env = _env(lat=20e-3)  # Wi-Fi-like
+    single = offload.plan(comp.fused(), env, Policy.FORCED)
+    multi = offload.plan(comp, env, Policy.FORCED)
+    # 4 RPC round trips vs 1 -> at least 3*2*20ms more
+    assert multi.total_time > single.total_time + 3 * 2 * 20e-3 * 0.9
+
+
+def test_residency_no_double_upload():
+    """An input used by two remote stages is uploaded once."""
+    src = DataItem("frame", 1_000_000, CLIENT)
+    stages = (
+        Stage("a", 1e9, ("frame",), (DataItem("y1", 10),), 0.9),
+        Stage("b", 1e9, ("frame", "y1"), (DataItem("y2", 10),), 0.9),
+    )
+    comp = StagedComputation("t", (src,), stages, ("y2",))
+    rep = offload.plan(comp, _env(), Policy.FORCED)
+    assert rep.uplink_bytes == 1_000_000
+
+
+def test_native_cannot_offload():
+    comp = _comp()
+    env = Environment(
+        client=_env().client, server=_env().server, link=_env().link,
+        wrapped=False,
+    )
+    with pytest.raises(ValueError):
+        offload.evaluate_plan(comp, (SERVER,) * 4, env)
+    # but local native works
+    rep = offload.evaluate_plan(comp, (CLIENT,) * 4, env)
+    assert rep.wrapper_time == 0.0
+
+
+def test_fused_preserves_flops_and_interfaces():
+    comp = _comp()
+    fused = comp.fused()
+    assert fused.total_flops() == pytest.approx(comp.total_flops())
+    assert len(fused.stages) == 1
+    assert fused.sources == comp.sources
+    assert fused.results == comp.results

@@ -1,0 +1,96 @@
+"""PSO optimizer invariants (paper §3.1 'PSO')."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pso
+
+
+def quad_eval(target):
+    def eval_fn(xs):
+        return jnp.sum((xs - target) ** 2, axis=-1)
+    return eval_fn
+
+
+def test_converges_on_quadratic():
+    d = 8
+    target = jnp.linspace(-0.5, 0.5, d)
+    cfg = pso.PSOConfig(num_particles=48, num_generations=60)
+    lo, hi = jnp.full((d,), -1.0), jnp.full((d,), 1.0)
+    best, score = pso.run(
+        jax.random.PRNGKey(0), jnp.zeros((d,)), lo, hi, quad_eval(target), cfg
+    )
+    assert float(score) < 1e-3
+    np.testing.assert_allclose(np.asarray(best), np.asarray(target), atol=0.05)
+
+
+def test_center_particle_guarantees_no_regression():
+    """Particle 0 is pinned to the previous solution: the result can never
+    be worse than the motion-continuity prior (key tracking property)."""
+    d = 6
+    cfg = pso.PSOConfig(num_particles=8, num_generations=3)
+    center = jnp.zeros((d,))
+    eval_fn = quad_eval(jnp.zeros((d,)))  # center IS the optimum
+    best, score = pso.run(
+        jax.random.PRNGKey(1), center, jnp.full((d,), -1.0), jnp.full((d,), 1.0),
+        eval_fn, cfg,
+    )
+    assert float(score) <= float(eval_fn(center[None])[0]) + 1e-9
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_gbest_monotone_nonincreasing(seed):
+    """The global best score never increases across generations."""
+    d = 5
+    cfg = pso.PSOConfig(num_particles=16, num_generations=1)
+    key = jax.random.PRNGKey(seed)
+    lo, hi = jnp.full((d,), -2.0), jnp.full((d,), 2.0)
+    eval_fn = quad_eval(jnp.ones((d,)) * 0.3)
+    state = pso.init_swarm(key, jnp.zeros((d,)), lo, hi, eval_fn, cfg)
+    prev = float(state.global_best_score)
+    for _ in range(5):
+        state = pso.swarm_step(state, lo, hi, eval_fn, cfg)
+        cur = float(state.global_best_score)
+        assert cur <= prev + 1e-9
+        prev = cur
+
+
+def test_positions_respect_bounds():
+    d = 4
+    cfg = pso.PSOConfig(num_particles=32, num_generations=10)
+    lo, hi = jnp.full((d,), -0.5), jnp.full((d,), 0.25)
+    eval_fn = quad_eval(jnp.full((d,), 5.0))  # optimum outside the box
+    key = jax.random.PRNGKey(2)
+    state = pso.init_swarm(key, jnp.zeros((d,)), lo, hi, eval_fn, cfg)
+    for _ in range(10):
+        state = pso.swarm_step(state, lo, hi, eval_fn, cfg)
+    assert bool(jnp.all(state.positions >= lo - 1e-6))
+    assert bool(jnp.all(state.positions <= hi + 1e-6))
+
+
+def test_deterministic_given_key():
+    d = 4
+    cfg = pso.PSOConfig(num_particles=16, num_generations=8)
+    lo, hi = jnp.full((d,), -1.0), jnp.full((d,), 1.0)
+    eval_fn = quad_eval(jnp.zeros((d,)))
+    a = pso.run(jax.random.PRNGKey(7), jnp.zeros((d,)), lo, hi, eval_fn, cfg)
+    b = pso.run(jax.random.PRNGKey(7), jnp.zeros((d,)), lo, hi, eval_fn, cfg)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+
+
+def test_chunked_equals_more_generations():
+    """run_chunked executes the same total number of generations."""
+    d = 4
+    cfg = pso.PSOConfig(num_particles=16, num_generations=8)
+    lo, hi = jnp.full((d,), -1.0), jnp.full((d,), 1.0)
+    eval_fn = quad_eval(jnp.zeros((d,)))
+    best, score, states = pso.run_chunked(
+        jax.random.PRNGKey(3), jnp.ones((d,)) * 0.5, lo, hi, eval_fn, cfg,
+        num_chunks=4,
+    )
+    assert len(states) == 4
+    assert float(score) < float(eval_fn(jnp.ones((1, d)) * 0.5)[0])

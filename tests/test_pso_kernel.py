@@ -1,0 +1,77 @@
+"""pso_update Pallas kernel vs oracle, and vs pso.swarm_step math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import pso_ref, pso_update as kmod
+
+CONSTS = dict(inertia=0.7298, cognitive=1.49618, social=1.49618,
+              velocity_clip=0.5)
+
+
+def _inputs(n, d, seed=0):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 6)
+    lo = -jnp.abs(jax.random.normal(ks[0], (d,))) - 0.5
+    hi = jnp.abs(jax.random.normal(ks[1], (d,))) + 0.5
+    span = hi - lo
+    x = lo + jax.random.uniform(ks[2], (n, d)) * span
+    v = jax.random.normal(ks[3], (n, d)) * 0.1
+    pb = lo + jax.random.uniform(ks[4], (n, d)) * span
+    gb = pb[0]
+    r1 = jax.random.uniform(ks[5], (n, d))
+    r2 = jax.random.uniform(jax.random.PRNGKey(seed + 1), (n, d))
+    return x, v, pb, gb, r1, r2, lo, hi
+
+
+@pytest.mark.parametrize("n,d", [(8, 32), (16, 27 + 5), (32, 64)])
+def test_kernel_matches_ref(n, d):
+    args = _inputs(n, d)
+    kx, kv = kmod.pso_update(*args, **CONSTS)
+    rx, rv = pso_ref.pso_update(*args, **CONSTS)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(rx), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(rv), rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([8, 16]), st.sampled_from([16, 32]))
+def test_kernel_matches_ref_property(seed, n, d):
+    args = _inputs(n, d, seed)
+    kx, kv = kmod.pso_update(*args, **CONSTS)
+    rx, rv = pso_ref.pso_update(*args, **CONSTS)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(rx), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(rv), rtol=1e-6, atol=1e-6)
+
+
+def test_bounds_respected():
+    args = _inputs(16, 32, seed=3)
+    kx, kv = kmod.pso_update(*args, **CONSTS)
+    lo, hi = args[6], args[7]
+    assert bool(jnp.all(kx >= lo[None] - 1e-6))
+    assert bool(jnp.all(kx <= hi[None] + 1e-6))
+    vmax = CONSTS["velocity_clip"] * (hi - lo)
+    assert bool(jnp.all(jnp.abs(kv) <= vmax[None] + 1e-6))
+
+
+def test_matches_swarm_step_math():
+    """The kernel computes exactly pso.swarm_step's update (same formula,
+    same clipping) given identical randoms."""
+    from repro.core import pso
+    n, d = 16, 16
+    args = _inputs(n, d, seed=7)
+    x, v, pb, gb, r1, r2, lo, hi = args
+    kx, kv = kmod.pso_update(*args, **CONSTS)
+    cfg = pso.PSOConfig(num_particles=n)
+    vel = (
+        cfg.inertia * v
+        + cfg.cognitive * r1 * (pb - x)
+        + cfg.social * r2 * (gb[None] - x)
+    )
+    span = hi - lo
+    vel = jnp.clip(vel, -cfg.velocity_clip * span, cfg.velocity_clip * span)
+    pos = jnp.clip(x + vel, lo, hi)
+    np.testing.assert_allclose(np.asarray(kx), np.asarray(pos), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(kv), np.asarray(vel), rtol=1e-6, atol=1e-6)

@@ -1,0 +1,69 @@
+"""HLO cost walker: loop scaling, dot flops, collective census."""
+
+import pytest
+
+from repro.roofline import hlo_cost
+
+MINI_HLO = """
+HloModule test
+
+%inner_body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %a = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%a, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups={}, to_apply=%sum
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8,16]) tuple(%i, %ar)
+}
+
+%cond (q: (s32[], f32[8,16])) -> pred[] {
+  %q = (s32[], f32[8,16]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+%sum (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %add = f32[] add(%x, %y)
+}
+
+ENTRY %main (in: f32[8,16]) -> f32[8,16] {
+  %in = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %tup = (s32[], f32[8,16]) tuple(%zero, %in)
+  %w = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%inner_body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_loop_scaled_dot_flops():
+    cost = hlo_cost.analyze_hlo(MINI_HLO)
+    # one dot: 2 * 8*16 out * 16 contract = 4096 flops, x10 trips
+    assert cost.flops == pytest.approx(4096 * 10)
+
+
+def test_loop_scaled_collective_bytes():
+    cost = hlo_cost.analyze_hlo(MINI_HLO)
+    # all-reduce of f32[8,16] = 512 B, x10 trips
+    assert cost.coll_bytes == pytest.approx(512 * 10)
+    assert cost.coll_by_kind["all-reduce"] == pytest.approx(5120)
+
+
+def test_shape_parse():
+    dims, nbytes = hlo_cost._shape_dims_bytes("bf16[4,128]{1,0}")
+    assert dims == [[4, 128]]
+    assert nbytes == 4 * 128 * 2
+
+
+def test_report_loader():
+    from repro.roofline import report
+
+    recs = report.load_records("experiments/dryrun")
+    s = report.summary(recs)
+    assert s["error"] == 0
+    assert s["ok"] >= 60  # 35 combos x 2 meshes, minus nothing
+    table = report.roofline_table(recs)
+    assert table.startswith("| arch | shape |")
+    assert "mixtral-8x7b" in table

@@ -1,0 +1,98 @@
+"""End-to-end tracker behaviour on synthetic sequences."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import handmodel as hm
+from repro.core import objective, pso, tracker
+from repro.core.camera import Camera
+from repro.data import rgbd
+
+CAM = Camera(width=64, height=64, fx=60.0, fy=60.0, cx=31.5, cy=31.5)
+
+
+@pytest.fixture(scope="module")
+def short_sequence():
+    cfg = rgbd.SequenceConfig(
+        num_frames=12, camera=CAM, noise_std=0.001,
+        fast_burst=(100, 101),  # no burst in this short clip
+        position_amplitude=0.04, curl_amplitude=0.5,
+    )
+    return rgbd.render_sequence(cfg)
+
+
+def test_tracks_synthetic_sequence(short_sequence):
+    frames, truth = short_sequence
+    cfg = tracker.TrackerConfig(
+        camera=CAM, pso=pso.PSOConfig(num_particles=48, num_generations=20),
+        smoothing=0.0,
+    )
+    t = tracker.Tracker(cfg, h0=truth[0])
+    errs = []
+    for i in range(1, frames.shape[0]):
+        h, score = t.step(frames[i])
+        errs.append(float(jnp.linalg.norm(h[:3] - truth[i][:3])))
+    assert np.mean(errs) < 0.03, errs  # < 3 cm mean position error
+
+
+def test_stage_composition_matches_fused(short_sequence):
+    """Running the 4 stages separately == the fused track_frame (the
+    Single-Step / Multi-Step implementations are the same math)."""
+    frames, truth = short_sequence
+    cfg = tracker.TrackerConfig(
+        camera=CAM, pso=pso.PSOConfig(num_particles=16, num_generations=5)
+    )
+    key = jax.random.PRNGKey(0)
+    h_prev = truth[0]
+    depth = frames[1]
+    fused = tracker.make_track_frame(cfg)
+    h_fused, score_fused = fused(key, h_prev, depth)
+
+    d_o, mask = tracker.stage_preprocess(cfg, h_prev, depth)
+    eval_fn = tracker._make_eval_fn(cfg, d_o, mask)
+    state, lo, hi = tracker.stage_spawn(cfg, key, h_prev, eval_fn)
+    state = tracker.stage_optimize(cfg, state, lo, hi, eval_fn)
+    h_multi, score_multi = tracker.stage_refine(cfg, state, h_prev)
+    np.testing.assert_allclose(
+        np.asarray(h_fused), np.asarray(h_multi), atol=1e-5
+    )
+    assert float(score_fused) == pytest.approx(float(score_multi), abs=1e-6)
+
+
+def test_staged_description_is_valid():
+    cfg = tracker.TrackerConfig(camera=CAM)
+    comp = tracker.build_staged(cfg)
+    comp.validate()
+    assert [s.name for s in comp.stages] == [
+        "preprocess", "spawn", "optimize", "refine",
+    ]
+    # the GPGPU stage dominates the FLOP budget (that is what's offloaded)
+    flops = {s.name: s.flops for s in comp.stages}
+    assert flops["optimize"] > 0.9 * comp.total_flops()
+
+
+def test_executed_simulation_couples_drops_to_quality():
+    """Slower deployments process fewer frames; with a fast burst in the
+    clip, the local-slow run must not beat the fast run on error."""
+    from repro.core.offload import Environment, Link, Policy, Tier, WrapperModel
+    from repro.sim import runtime
+
+    cfg = rgbd.SequenceConfig(num_frames=20, camera=CAM, fast_burst=(8, 14))
+    frames, truth = cfg, None
+    frames, truth = rgbd.render_sequence(cfg)
+    tcfg = tracker.TrackerConfig(
+        camera=CAM, pso=pso.PSOConfig(num_particles=32, num_generations=10),
+        smoothing=0.0,
+    )
+    comp_flops = tracker.build_staged(tcfg).total_flops()
+    fast = Tier("fast", comp_flops * 60, 50e9)  # 60 fps-capable
+    slow = Tier("slow", comp_flops * 5, 20e9)  # 5 fps-capable
+    link = Link("eth", 117e6, 0.3e-3)
+    env_fast = Environment(client=fast, server=fast, link=link, wrapped=False)
+    env_slow = Environment(client=slow, server=slow, link=link, wrapped=False)
+    r_fast = runtime.executed_run(tcfg, env_fast, Policy.LOCAL, frames, truth)
+    r_slow = runtime.executed_run(tcfg, env_slow, Policy.LOCAL, frames, truth)
+    assert r_slow.sim.stats.dropped > r_fast.sim.stats.dropped
+    assert len(r_fast.sim.stats.processed) > len(r_slow.sim.stats.processed)
