@@ -19,6 +19,7 @@ from benchmarks import (
     kernel_bench,
     pso_throughput,
     roofline_bench,
+    topology_bench,
 )
 from benchmarks.common import emit
 
@@ -31,6 +32,7 @@ MODULES = [
     ("calibrate", calibrate),
     ("roofline", roofline_bench),
     ("edge_llm", edge_llm),
+    ("topology", topology_bench),
 ]
 
 

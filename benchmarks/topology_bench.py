@@ -1,0 +1,93 @@
+"""Planner throughput: exhaustive vs chain-DP across tier counts and
+pipeline depths.
+
+One row per (k_tiers, n_stages) point with the DP planning time and its
+speedup over exhaustive search; beyond ~4096 candidates the exhaustive
+cost is projected from a measured per-plan evaluation rate (2^24 plans
+would take hours — the projection is the point of the row).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.costengine import CostEngine
+from repro.core.planners import PLANNERS
+from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
+from repro.core.topology import Link, Tier, Topology, WrapperModel
+
+MAX_MEASURED_CANDIDATES = 4096
+
+
+def _chain_comp(n_stages: int) -> StagedComputation:
+    sources = (DataItem("frame", 500_000, CLIENT),)
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 20_000 + 997 * i)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=5e9 / n_stages,
+                inputs=(prev,),
+                outputs=(out,),
+                parallel_fraction=0.95,
+            )
+        )
+        prev = out.name
+    return StagedComputation("bench_chain", sources, tuple(stages), (prev,))
+
+
+def _topo(k: int) -> Topology:
+    tiers = [("device", Tier("device", 0.05e12, 20e9))]
+    links = []
+    if k >= 2:
+        tiers.append(("edge", Tier("edge", 1e12, 40e9)))
+        links.append(Link("5g", 60e6, 8e-3))
+    if k >= 3:
+        tiers.append(("cloud", Tier("cloud", 5e12, 60e9)))
+        links.append(Link("dcn", 25e9, 10e-6))
+    return Topology.chain(tiers, links, wrapper=WrapperModel())
+
+
+def _time(fn, repeats: int = 3) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench() -> list:
+    rows = []
+    for k in (2, 3):
+        topo = _topo(k)
+        engine = CostEngine(topo)
+        for n in (4, 8, 12, 16, 24):
+            comp = _chain_comp(n)
+            t_dp = _time(lambda: PLANNERS["chain_dp"].plan(comp, engine))
+            candidates = k**n
+            if candidates <= MAX_MEASURED_CANDIDATES:
+                t_ex = _time(
+                    lambda: PLANNERS["exhaustive"].plan(comp, engine), repeats=1
+                )
+                ex_tag = "measured"
+            else:
+                # projected: per-plan evaluation rate x lattice size; use a
+                # round-robin placement so the timed evaluate pays the same
+                # transfer/path arithmetic a typical lattice point does
+                # (an all-home plan would flatter the projection)
+                names = topo.tier_names()
+                placements = tuple(names[i % k] for i in range(n))
+                t_eval = _time(lambda: engine.evaluate(comp, placements))
+                t_ex = t_eval * candidates
+                ex_tag = "projected"
+            speedup = t_ex / max(t_dp, 1e-12)
+            rows.append((
+                f"topology/plan_k{k}_n{n}",
+                t_dp * 1e6,
+                f"dp_plans_per_s={1.0 / max(t_dp, 1e-12):.0f};"
+                f"exhaustive_{ex_tag}_s={t_ex:.4g};speedup={speedup:.1f}x",
+            ))
+    return rows

@@ -55,6 +55,23 @@ def main() -> None:
               f"{r['auto']:9.2f} {r['state_bytes'] / 1024:9.1f}K  {choice}")
     print("\ntok/s per policy; Auto always matches the best (paper's claim).")
 
+    # --- part 3: device -> edge -> cloud chain (the multi-machine scaling
+    # the paper flags as future work). 18 stages x 3 tiers = 3^18 candidate
+    # plans — AUTO routes through the exact O(n*k^2) chain-DP planner.
+    topo = hardware.three_tier_environment()
+    print(f"\n3-tier chain: {' -> '.join(topo.tier_names())} "
+          f"({' + '.join(l.name for l in topo.links.values())})")
+    print(f"{'arch':24s} {'auto tok/s':>10s}  placement (embed..head)")
+    for arch in ("gemma-2b", "mamba2-370m", "mixtral-8x7b"):
+        ep = edge.plan_decode(
+            registry.get(arch), topo, Policy.AUTO,
+            granularity="multi_step", num_stage_groups=16,
+        )
+        tags = "".join(p[0].upper() for p in ep.report.placements)
+        print(f"{arch:24s} {ep.tokens_per_second:10.2f}  {tags}")
+    print("\nD=device, E=edge, C=cloud per stage; the DP prices every "
+          "hop of the chain.")
+
 
 if __name__ == "__main__":
     main()

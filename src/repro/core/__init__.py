@@ -6,7 +6,11 @@
 * ``pso``        — Particle Swarm Optimization (lax loops, shardable eval).
 * ``tracker``    — the 4-stage per-frame pipeline (Fig. 2).
 * ``stages``     — StagedComputation: byte/FLOP-annotated stage graphs.
-* ``offload``    — placement policies Local/Forced/Auto + exact cost model.
+* ``topology``   — Tier/Link/Topology: N-tier placement graphs.
+* ``costengine`` — the unified cost engine (all transfer/wrapper/compute
+  arithmetic; per-leg latency records for exact jitter resampling).
+* ``planners``   — exhaustive / single-crossing / chain-DP placement.
+* ``offload``    — placement policies Local/Forced/Auto + two-tier shim.
 * ``wrapper``    — container ("JNI") overhead measurement/calibration.
 """
 

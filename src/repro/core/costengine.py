@@ -1,0 +1,315 @@
+"""The unified cost engine: every cost in the system is computed here.
+
+Historically the transfer/wrapper/compute arithmetic lived in three
+places — ``offload.evaluate_plan``, ``net.transport.Transport`` and a
+jitter-reconstruction hack in ``sim.runtime`` that divided latency back
+out of an aggregate ``network_time``.  ``CostEngine`` owns all of it:
+
+* :meth:`CostEngine.evaluate` prices a placement vector over any
+  :class:`~repro.core.topology.Topology` with exact residency tracking,
+  and records every latency leg it charges in ``PlanReport.legs`` so
+  jitter resampling (``PlanReport.jittered_total``) is *exact* rather
+  than reverse-engineered.
+* The scalar helpers (:meth:`transfer_scalar`, :meth:`envelope_scalar`,
+  :meth:`marshal_scalar`, :meth:`compute_time`) are the same arithmetic
+  exposed piecewise for planners (the chain-DP planner prices DP
+  transitions with them, guaranteeing agreement with ``evaluate``).
+* The module-level ``wire_time`` / ``serialization_time`` /
+  ``envelope_time`` primitives serve ``net.transport`` so the executed
+  simulator charges the identical formulas.
+
+Cost semantics (unchanged from the calibrated two-tier model):
+
+  compute  : Amdahl split — parallel_fraction at tier.accel_flops, the
+             rest at tier.scalar_flops — plus tier.dispatch_overhead.
+  wrapper  : fixed per-call cost plus bytes / serialization bandwidth on
+             both ends of every remote transfer; local wrapped calls
+             cross the (faster) JNI marshal path instead.
+  network  : every remote stage invocation pays a request/response
+             envelope of 2 x latency per link leg on the home->tier
+             path; payloads pay wire time per leg.  A payload whose
+             source lies on the request path piggybacks (no extra
+             latency); pulling data against the request direction is an
+             explicit fetch costing one latency per leg.  Result items
+             ride the final response home (no extra latency).  Item
+             residency is tracked so a frame uploaded once is not
+             re-sent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.stages import CLIENT, DataItem, StagedComputation, Stage
+from repro.core.topology import Link, Topology, WrapperModel, sample_latency
+
+
+# ---------------------------------------------------------------------------
+# leg-level primitives (shared with net.transport)
+# ---------------------------------------------------------------------------
+
+
+def wire_time(nbytes: int, links: Sequence[Link]) -> float:
+    """Pure bandwidth time for a payload crossing the given legs."""
+    t = 0.0
+    for link in links:
+        t += nbytes / link.bandwidth
+    return t
+
+
+def serialization_time(nbytes: int, wrapper: WrapperModel) -> float:
+    """Serialize at the source + deserialize at the destination."""
+    return 2 * (nbytes / wrapper.serialization_bandwidth)
+
+
+def envelope_time(
+    links: Sequence[Link], wrapper: Optional[WrapperModel] = None, rng=None
+) -> float:
+    """Request + response wire latency (optionally jitter-sampled) plus
+    proxy/skeleton call overhead for one remote invocation."""
+    t = 0.0
+    for link in links:
+        for _ in range(2):
+            t += link.transfer_time(0, rng)
+    if wrapper is not None:
+        t += 2 * wrapper.call_overhead
+    return t
+
+
+# ---------------------------------------------------------------------------
+# reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyLeg:
+    """One charged latency leg — the unit of exact jitter resampling."""
+
+    link: str
+    latency: float
+    jitter: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanReport:
+    placements: Tuple[str, ...]
+    total_time: float
+    compute_time: float
+    wrapper_time: float
+    network_time: float
+    uplink_bytes: int
+    downlink_bytes: int
+    legs: Tuple[LatencyLeg, ...] = ()
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.total_time if self.total_time > 0 else float("inf")
+
+    def jittered_total(self, rng) -> float:
+        """Resample every recorded latency leg; exact by construction."""
+        if not self.legs:
+            return self.total_time
+        base = self.total_time
+        for leg in self.legs:
+            base -= leg.latency
+            base += sample_latency(leg.latency, leg.jitter, rng)
+        return base
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class CostEngine:
+    """Prices placements of a ``StagedComputation`` over a ``Topology``."""
+
+    def __init__(self, topology: Topology):
+        self.topology = topology
+
+    # -- small shared pieces ------------------------------------------------
+
+    def placement_tiers(self) -> Tuple[str, ...]:
+        """Tier names a stage may be placed on (home only when native)."""
+        topo = self.topology
+        return topo.tier_names() if topo.wrapped else (topo.home,)
+
+    def resolve_origin(self, item: DataItem) -> str:
+        """Map an item's declared origin onto a tier name; the legacy
+        ``"client"`` literal aliases the topology's home tier."""
+        if item.origin in self.topology.tiers:
+            return item.origin
+        if item.origin == CLIENT:
+            return self.topology.home
+        raise ValueError(
+            f"item {item.name!r} originates at unknown tier {item.origin!r}"
+        )
+
+    def compute_time(self, stage: Stage, tier_name: str) -> float:
+        tier = self.topology.tier(tier_name)
+        par = stage.flops * stage.parallel_fraction
+        ser = stage.flops - par
+        accel = tier.accel_flops if tier.has_accelerator else tier.scalar_flops
+        return par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+
+    def _piggybacks(self, src: str, dst: str) -> bool:
+        """A payload rides the pending RPC request when its source lies on
+        the home->dst path; anything else is an explicit fetch."""
+        return src in self.topology.path_tiers(self.topology.home, dst)
+
+    # -- scalar costs (used by planners; same arithmetic as evaluate) -------
+
+    def envelope_scalar(self, tier_name: str) -> float:
+        topo = self.topology
+        if not topo.wrapped:
+            return 0.0
+        if tier_name == topo.home:
+            return topo.wrapper.call_overhead
+        t = 2 * topo.wrapper.call_overhead
+        for link in topo.path_links(topo.home, tier_name):
+            t += 2 * link.latency
+        return t
+
+    def marshal_scalar(self, nbytes: int, tier_name: str) -> float:
+        """JNI marshal of an already-resident input of a wrapped home call."""
+        topo = self.topology
+        if topo.wrapped and tier_name == topo.home:
+            return nbytes / topo.wrapper.jni_bandwidth
+        return 0.0
+
+    def transfer_scalar(
+        self,
+        nbytes: int,
+        src: str,
+        dst: str,
+        piggyback: Optional[bool] = None,
+    ) -> float:
+        topo = self.topology
+        links = topo.path_links(src, dst)
+        piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
+        t = 0.0
+        if not piggy:
+            for link in links:
+                t += link.latency
+        t += serialization_time(nbytes, topo.wrapper)
+        t += wire_time(nbytes, links)
+        return t
+
+    # -- exact plan evaluation ---------------------------------------------
+
+    def evaluate(
+        self, comp: StagedComputation, placements: Sequence[str]
+    ) -> PlanReport:
+        """Exact cost of one placement vector with residency tracking."""
+        comp.validate()
+        topo = self.topology
+        if len(placements) != len(comp.stages):
+            raise ValueError(
+                f"{len(placements)} placements for {len(comp.stages)} stages"
+            )
+        for p in placements:
+            if p not in topo.tiers:
+                raise ValueError(f"unknown tier {p!r} in placements")
+        if not topo.wrapped and any(p != topo.home for p in placements):
+            raise ValueError(
+                "native (unwrapped) execution cannot offload — the paper's "
+                "C++ baseline runs purely locally"
+            )
+
+        table = comp.item_table()
+        # residency[name] -> set of tiers currently holding the item
+        residency: Dict[str, Set[str]] = {
+            i.name: {self.resolve_origin(i)} for i in comp.sources
+        }
+
+        compute_t = 0.0
+        wrapper_t = 0.0
+        network_t = 0.0
+        up_bytes = 0
+        down_bytes = 0
+        legs: List[LatencyLeg] = []
+
+        def _ship(nbytes: int, src: str, dst: str, piggyback: Optional[bool]) -> None:
+            """Payload cost: fetch legs + serialize/deserialize + wire."""
+            nonlocal wrapper_t, network_t, up_bytes, down_bytes
+            links = topo.path_links(src, dst)
+            piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
+            if not piggy:
+                for link in links:
+                    network_t += link.latency
+                    legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+            wrapper_t += serialization_time(nbytes, topo.wrapper)
+            network_t += wire_time(nbytes, links)
+            # byte accounting is per wire hop relative to home (a payload
+            # crossing two legs is counted on each): a hop whose far end
+            # lies on its near end's route home is downlink — this keeps
+            # star leaf->leaf traffic (down to the hub, then up a spoke)
+            # honest, where any whole-transfer label would be wrong
+            hops = topo.path_tiers(src, dst)
+            for a, b in zip(hops, hops[1:]):
+                if b in topo.path_tiers(a, topo.home):
+                    down_bytes += nbytes
+                else:
+                    up_bytes += nbytes
+
+        def _best_source(holders: Set[str], dst: str, nbytes: int) -> str:
+            if len(holders) == 1:
+                return next(iter(holders))
+            return min(
+                sorted(holders),
+                key=lambda s: self.transfer_scalar(nbytes, s, dst),
+            )
+
+        for stage, dst in zip(comp.stages, placements):
+            if topo.wrapped:
+                if dst != topo.home:
+                    # RPC envelope: proxy + skeleton call costs, request +
+                    # response wire latency on every leg of the route.
+                    wrapper_t += 2 * topo.wrapper.call_overhead
+                    for link in topo.path_links(topo.home, dst):
+                        network_t += 2 * link.latency
+                        legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+                        legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+                else:
+                    # Local wrapped invocation still crosses the JNI boundary.
+                    wrapper_t += topo.wrapper.call_overhead
+            # --- move inputs to `dst` (piggybacked on the invocation) ---
+            for name in stage.inputs:
+                holders = residency[name]
+                if dst not in holders:
+                    item = table[name]
+                    src = _best_source(holders, dst, item.nbytes)
+                    _ship(item.nbytes, src, dst, piggyback=None)
+                    holders.add(dst)
+                elif topo.wrapped and dst == topo.home:
+                    # Already-local input of a wrapped home call marshals
+                    # across JNI once (fast path: pinned arrays).
+                    wrapper_t += table[name].nbytes / topo.wrapper.jni_bandwidth
+            # --- compute ---
+            compute_t += self.compute_time(stage, dst)
+            for o in stage.outputs:
+                residency[o.name] = {dst}
+
+        # --- results must land back home. If the producing stage was
+        # remote this is the RPC response payload (no extra envelope);
+        # residency tracking keeps it exact either way.
+        for rname in comp.results:
+            holders = residency[rname]
+            if topo.home not in holders:
+                item = table[rname]
+                src = _best_source(holders, topo.home, item.nbytes)
+                _ship(item.nbytes, src, topo.home, piggyback=True)
+                holders.add(topo.home)
+
+        total = compute_t + wrapper_t + network_t
+        return PlanReport(
+            placements=tuple(placements),
+            total_time=total,
+            compute_time=compute_t,
+            wrapper_time=wrapper_t,
+            network_time=network_t,
+            uplink_bytes=up_bytes,
+            downlink_bytes=down_bytes,
+            legs=tuple(legs),
+        )

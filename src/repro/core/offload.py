@@ -1,44 +1,54 @@
 """Placement policies for staged computations across compute tiers.
 
-This is the RAPID decision engine (paper §3.2) rebuilt analytically:
-given a ``StagedComputation``, two tiers (client/server) and the link
-between them, choose for each stage whether to run it locally or remotely.
+This is the RAPID decision engine (paper §3.2) generalized from the
+paper's hard-wired client/server pair to arbitrary N-tier topologies:
+a :class:`~repro.core.topology.Topology` names its tiers ("device",
+"edge", "cloud", ...) and joins them with links; placements are tier
+names; and every cost — compute, wrapper/serialization, per-leg network
+latency and wire time — is priced by the single
+:class:`~repro.core.costengine.CostEngine` that ``net.transport`` and
+``sim.runtime`` also delegate to.
 
-Policies (paper Table 1):
-  * LOCAL  — never offload (the "RAPID-enabled, no offloading" rows of
-    Fig. 4).
-  * FORCED — always offload every offloadable stage (models a client with
-    no GPU).
-  * AUTO   — per-stage argmin of expected step latency under the cost
-    model; with 4 stages the plan space is 2^4 = 16 and we search it
-    exhaustively with exact residency tracking, so AUTO here is the
-    *oracle* version of RAPID's adaptive heuristic.
+Policies (paper Table 1, unchanged semantics):
+  * LOCAL  — never offload: every stage at the topology's home tier
+    (the "RAPID-enabled, no offloading" rows of Fig. 4).
+  * FORCED — every stage on the fastest remote tier (models a client
+    with no GPU).
+  * AUTO   — argmin of expected step latency under the cost model,
+    via a pluggable planner (``core.planners``): exhaustive search for
+    small plan lattices (the oracle version of RAPID's heuristic), an
+    exact O(n*k^2) dynamic program for long linear chains (per-layer
+    LLM decode pipelines at 3+ tiers), and the single-crossing family
+    as the general fallback.
 
-Cost model per plan (all times in seconds):
-  compute  : Amdahl split — parallel_fraction at tier.accel_flops, the
-             rest at tier.scalar_flops — plus tier.dispatch_overhead.
-  wrapper  : the Java/JNI "container" analogue (core.wrapper): a fixed
-             per-offloadable-call cost plus bytes / serialization
-             bandwidth, paid on BOTH ends of every remote invocation and
-             once locally per wrapped call (Fig. 4's overhead study).
-  network  : RPC semantics — every *remote stage invocation* pays a
-             request/response envelope of 2 x link.latency plus wrapper
-             call costs on both ends; item payloads piggyback on the RPC
-             message and pay serialization (both ends) + bandwidth. Item
-             residency is tracked so a frame uploaded once is not re-sent
-             (RAPID caches registered data the same way). This is why the
-             paper's Multi-Step loses to Single-Step — 4 RPC envelopes vs
-             1 — and why Wi-Fi (10-60 ms latency) is so punishing.
+The two-tier :class:`Environment` of the original implementation
+survives as a thin shim over ``Topology.two_tier`` — placements keep the
+historical ``"client"`` / ``"server"`` literals, and existing callers
+(sim, serving, benchmarks, examples) work unchanged while new code
+passes a ``Topology`` directly.  See ``core/costengine.py`` for the full
+cost semantics (RPC envelopes, piggybacked payloads, residency
+tracking, per-leg jitter records).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import enum
-import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Union
 
-from repro.core.stages import CLIENT, SERVER, DataItem, Stage, StagedComputation
+from repro.core.costengine import (  # noqa: F401  (re-exported API)
+    CostEngine,
+    LatencyLeg,
+    PlanReport,
+)
+from repro.core.planners import PLANNERS, auto_planner
+from repro.core.stages import StagedComputation
+from repro.core.topology import (  # noqa: F401  (re-exported API)
+    Link,
+    Tier,
+    Topology,
+    WrapperModel,
+)
 
 
 class Policy(enum.Enum):
@@ -48,54 +58,13 @@ class Policy(enum.Enum):
 
 
 @dataclasses.dataclass(frozen=True)
-class Tier:
-    """A compute tier (the paper's "server" / "laptop", or a TPU pod)."""
-
-    name: str
-    accel_flops: float  # effective accelerator FLOP/s for this workload
-    scalar_flops: float  # serial/CPU FLOP/s (the non-parallel fraction)
-    dispatch_overhead: float = 50e-6  # per-stage launch cost, seconds
-    has_accelerator: bool = True
-
-
-@dataclasses.dataclass(frozen=True)
-class Link:
-    """A network link between tiers."""
-
-    name: str
-    bandwidth: float  # bytes / second
-    latency: float  # one-way, seconds
-    jitter: float = 0.0  # stddev of latency, seconds (Wi-Fi interference)
-
-    def transfer_time(self, nbytes: int, rng=None) -> float:
-        lat = self.latency
-        if rng is not None and self.jitter > 0.0:
-            lat = max(0.0, float(rng.normal(self.latency, self.jitter)))
-        return lat + nbytes / self.bandwidth
-
-
-@dataclasses.dataclass(frozen=True)
-class WrapperModel:
-    """Container ("JNI/JVM") overhead model — see core/wrapper.py for the
-    calibration of these constants.
-
-    Two distinct marshalling paths, matching the Java stack the paper
-    uses: a *local* wrapped call crosses JNI with pinned/direct buffers
-    (fast), while a *remote* call must push the payload through Java
-    object-stream serialization (slow). Conflating the two cannot
-    reconcile Fig. 4 (modest local wrapper tax) with Fig. 5 (~10 fps
-    offloaded => tens of ms of serialization per frame)."""
-
-    call_overhead: float = 1.2e-3  # fixed cost per wrapped method call
-    serialization_bandwidth: float = 20e6  # remote path, bytes/s
-    jni_bandwidth: float = 60e6  # local JNI marshal path, bytes/s
-
-    def cost(self, nbytes: int) -> float:
-        return self.call_overhead + nbytes / self.serialization_bandwidth
-
-
-@dataclasses.dataclass(frozen=True)
 class Environment:
+    """Two-tier compatibility shim over :class:`Topology`.
+
+    The paper's deployment shape: one client, one server, one link.
+    ``as_topology()`` maps it onto the graph model with placement names
+    "client" (home) and "server"."""
+
     client: Tier
     server: Tier
     link: Link
@@ -103,153 +72,67 @@ class Environment:
     # Native mode: no container at all (the C++ baseline of Fig. 4).
     wrapped: bool = True
 
-
-@dataclasses.dataclass(frozen=True)
-class PlanReport:
-    placements: Tuple[str, ...]
-    total_time: float
-    compute_time: float
-    wrapper_time: float
-    network_time: float
-    uplink_bytes: int
-    downlink_bytes: int
-
-    @property
-    def fps(self) -> float:
-        return 1.0 / self.total_time if self.total_time > 0 else float("inf")
+    def as_topology(self) -> Topology:
+        return Topology.two_tier(
+            self.client, self.server, self.link, self.wrapper, self.wrapped
+        )
 
 
-def _stage_compute_time(stage: Stage, tier: Tier) -> float:
-    par = stage.flops * stage.parallel_fraction
-    ser = stage.flops - par
-    accel = tier.accel_flops if tier.has_accelerator else tier.scalar_flops
-    return par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+EnvironmentLike = Union[Environment, Topology]
+
+
+def as_topology(env: EnvironmentLike) -> Topology:
+    if isinstance(env, Topology):
+        return env
+    return env.as_topology()
 
 
 def evaluate_plan(
     comp: StagedComputation,
     placements: Sequence[str],
-    env: Environment,
+    env: EnvironmentLike,
 ) -> PlanReport:
     """Exact cost of one placement vector with residency tracking."""
-    comp.validate()
-    table = comp.item_table()
-    # residency[name] -> set of sides currently holding the item
-    residency: Dict[str, set] = {i.name: {i.origin} for i in comp.sources}
-
-    compute_t = 0.0
-    wrapper_t = 0.0
-    network_t = 0.0
-    up_bytes = 0
-    down_bytes = 0
-
-    if not env.wrapped and any(p == SERVER for p in placements):
-        raise ValueError(
-            "native (unwrapped) execution cannot offload — the paper's "
-            "C++ baseline runs purely locally"
-        )
-
-    def _ship(nbytes: int, to_server: bool) -> None:
-        """Payload cost: serialize out + deserialize in + wire time."""
-        nonlocal wrapper_t, network_t, up_bytes, down_bytes
-        wrapper_t += 2 * (nbytes / env.wrapper.serialization_bandwidth)
-        network_t += nbytes / env.link.bandwidth
-        if to_server:
-            up_bytes += nbytes
-        else:
-            down_bytes += nbytes
-
-    for stage, side in zip(comp.stages, placements):
-        tier = env.server if side == SERVER else env.client
-        if env.wrapped:
-            if side == SERVER:
-                # RPC envelope: proxy + skeleton call costs, request +
-                # response wire latency.
-                wrapper_t += 2 * env.wrapper.call_overhead
-                network_t += 2 * env.link.latency
-            else:
-                # Local wrapped invocation still crosses the JNI boundary.
-                wrapper_t += env.wrapper.call_overhead
-        # --- move inputs to `side` (piggybacked on the invocation) ---
-        for name in stage.inputs:
-            if side not in residency[name]:
-                item = table[name]
-                if side == CLIENT:
-                    network_t += env.link.latency  # explicit fetch leg
-                _ship(item.nbytes, to_server=(side == SERVER))
-                residency[name].add(side)
-            elif env.wrapped and side == CLIENT:
-                # Local wrapped call marshals its (local) inputs across
-                # the JNI boundary once — the Fig. 4 tax (fast path:
-                # pinned arrays, no object-stream serialization).
-                wrapper_t += table[name].nbytes / env.wrapper.jni_bandwidth
-        # --- compute ---
-        compute_t += _stage_compute_time(stage, tier)
-        for o in stage.outputs:
-            residency[o.name] = {side}
-
-    # --- results must land back at the client (Fig. 3 category A). If the
-    # last producing stage was remote, this is the RPC response payload
-    # (no extra envelope); residency tracking keeps it exact either way.
-    for rname in comp.results:
-        if CLIENT not in residency[rname]:
-            item = table[rname]
-            _ship(item.nbytes, to_server=False)
-            residency[rname].add(CLIENT)
-
-    total = compute_t + wrapper_t + network_t
-    return PlanReport(
-        placements=tuple(placements),
-        total_time=total,
-        compute_time=compute_t,
-        wrapper_time=wrapper_t,
-        network_time=network_t,
-        uplink_bytes=up_bytes,
-        downlink_bytes=down_bytes,
-    )
+    return CostEngine(as_topology(env)).evaluate(comp, placements)
 
 
 def plan(
     comp: StagedComputation,
-    env: Environment,
+    env: EnvironmentLike,
     policy: Policy,
     max_exhaustive: int = 20,
+    planner: Optional[str] = None,
 ) -> PlanReport:
-    """Choose placements under a policy and return the cost report."""
+    """Choose placements under a policy and return the cost report.
+
+    ``max_exhaustive`` bounds the lattice AUTO may search exhaustively
+    (k_tiers ** n_stages <= 2 ** max_exhaustive), but linear chains
+    switch to the equally-exact O(n*k^2) DP once the lattice outgrows a
+    few hundred plans — see ``planners.auto_planner``.  Pass
+    ``planner`` ("exhaustive" | "single_crossing" | "chain_dp") to force
+    a specific AUTO strategy.
+    """
+    topo = as_topology(env)
+    engine = CostEngine(topo)
     n = len(comp.stages)
     if policy is Policy.LOCAL:
-        return evaluate_plan(comp, (CLIENT,) * n, env)
+        return engine.evaluate(comp, (topo.home,) * n)
     if policy is Policy.FORCED:
-        return evaluate_plan(comp, (SERVER,) * n, env)
+        return engine.evaluate(comp, (topo.primary_remote(),) * n)
 
-    # AUTO — exhaustive over the plan lattice (2^n); for long pipelines
-    # (LLM serve steps with per-layer stages) fall back to a boundary
-    # search: optimal plans for pipelines whose transfer costs are
-    # monotone along the chain are single-crossing (client prefix, server
-    # middle, client suffix), an O(n^2) family.
-    best: Optional[PlanReport] = None
-    if n <= max_exhaustive:
-        candidates = itertools.product((CLIENT, SERVER), repeat=n)
-    else:
-        candidates = _single_crossing_plans(n)
-    for placements in candidates:
-        rep = evaluate_plan(comp, placements, env)
-        if best is None or rep.total_time < best.total_time:
-            best = rep
-    assert best is not None
-    return best
-
-
-def _single_crossing_plans(n: int):
-    for lo in range(n + 1):
-        for hi in range(lo, n + 1):
-            yield tuple(
-                SERVER if lo <= i < hi else CLIENT for i in range(n)
+    if planner is not None:
+        if planner not in PLANNERS:
+            raise ValueError(
+                f"unknown planner {planner!r}; choose from {sorted(PLANNERS)}"
             )
+        chosen = PLANNERS[planner]
+    else:
+        chosen = auto_planner(comp, engine, max_candidates=2**max_exhaustive)
+    return chosen.plan(comp, engine)
 
 
 def compare_granularities(
-    comp: StagedComputation, env: Environment, policy: Policy
+    comp: StagedComputation, env: EnvironmentLike, policy: Policy
 ) -> Dict[str, PlanReport]:
     """The paper's Single-Step vs Multi-Step comparison for one setup."""
     return {

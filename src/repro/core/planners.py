@@ -1,0 +1,207 @@
+"""Pluggable placement planners over the topology plan lattice.
+
+Three strategies, all pricing candidates through the same
+:class:`~repro.core.costengine.CostEngine` so they agree exactly:
+
+* ``ExhaustivePlanner``      — every tier^n assignment; the oracle for
+  small lattices (the paper's 4-stage pipeline is 2^4 = 16 plans).
+* ``SingleCrossingPlanner``  — home-prefix / remote-middle / home-suffix
+  plans per remote tier, O(n^2 * k); the optimal family for pipelines
+  whose transfer costs are monotone along the chain.
+* ``ChainDPPlanner``         — exact O(n * k^2) dynamic program for
+  *linear* computations (each item consumed by at most one stage, each
+  stage fed by its predecessor and/or sources).  This is what makes
+  per-layer-group LLM decode pipelines tractable at k > 2 tiers and
+  n > 20 stages, where the lattice has k^n points.
+
+``auto_planner`` picks the cheapest applicable strategy for a given
+lattice size; ``PLANNERS`` exposes them by name for explicit override.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional
+
+from repro.core.costengine import CostEngine, PlanReport
+from repro.core.stages import StagedComputation
+
+
+class ExhaustivePlanner:
+    """Argmin over the full tier^n plan lattice."""
+
+    name = "exhaustive"
+
+    def plan(self, comp: StagedComputation, engine: CostEngine) -> PlanReport:
+        n = len(comp.stages)
+        best: Optional[PlanReport] = None
+        for placements in itertools.product(engine.placement_tiers(), repeat=n):
+            rep = engine.evaluate(comp, placements)
+            if best is None or rep.total_time < best.total_time:
+                best = rep
+        assert best is not None
+        return best
+
+
+class SingleCrossingPlanner:
+    """home* remote* home* plans for each remote tier — O(n^2 * k)."""
+
+    name = "single_crossing"
+
+    def plan(self, comp: StagedComputation, engine: CostEngine) -> PlanReport:
+        n = len(comp.stages)
+        home = engine.topology.home
+        remotes = [t for t in engine.placement_tiers() if t != home] or [home]
+        best: Optional[PlanReport] = None
+        for remote in remotes:
+            for lo in range(n + 1):
+                for hi in range(lo, n + 1):
+                    placements = tuple(
+                        remote if lo <= i < hi else home for i in range(n)
+                    )
+                    rep = engine.evaluate(comp, placements)
+                    if best is None or rep.total_time < best.total_time:
+                        best = rep
+        assert best is not None
+        return best
+
+
+class ChainDPPlanner:
+    """Exact DP over linear chains: state = tier of the current stage.
+
+    dp[i][t] = cost of stages 0..i with stage i on tier t, where each
+    stage's term prices its envelope, compute, and source-item moves, and
+    the transition prices moving the inter-stage activation t' -> t.  All
+    terms come from the shared ``CostEngine`` scalar helpers, so the DP
+    optimum matches exhaustive search wherever both apply.
+    """
+
+    name = "chain_dp"
+
+    @staticmethod
+    def applicable(comp: StagedComputation) -> bool:
+        """True iff the computation is a linear chain the DP prices exactly:
+        every item consumed at most once, stage i fed only by stage i-1
+        outputs and sources, results produced by the final stage."""
+        if not comp.stages:
+            return False
+        src_names = {i.name for i in comp.sources}
+        consumed: Dict[str, int] = {}
+        prev_outputs: set = set()
+        for stage in comp.stages:
+            for name in stage.inputs:
+                consumed[name] = consumed.get(name, 0) + 1
+                if name not in src_names and name not in prev_outputs:
+                    return False
+            prev_outputs = {o.name for o in stage.outputs}
+        if any(v > 1 for v in consumed.values()):
+            return False
+        return set(comp.results) <= prev_outputs
+
+    def plan(self, comp: StagedComputation, engine: CostEngine) -> PlanReport:
+        if not self.applicable(comp):
+            raise ValueError(
+                f"computation {comp.name!r} is not a linear chain; use the "
+                "exhaustive or single-crossing planner"
+            )
+        topo = engine.topology
+        tiers = engine.placement_tiers()
+        stages = comp.stages
+        n = len(stages)
+        table = comp.item_table()
+        src_names = {i.name for i in comp.sources}
+        origin = {i.name: engine.resolve_origin(i) for i in comp.sources}
+        # outputs of stage i-1 (chain feed of stage i)
+        prev_out: List[set] = [set()] + [
+            {o.name for o in s.outputs} for s in stages[:-1]
+        ]
+
+        def node_cost(i: int, t: str) -> float:
+            stage = stages[i]
+            c = engine.envelope_scalar(t) + engine.compute_time(stage, t)
+            for name in stage.inputs:
+                if name in src_names:
+                    nb = table[name].nbytes
+                    o = origin[name]
+                    if o == t:
+                        c += engine.marshal_scalar(nb, t)
+                    else:
+                        c += engine.transfer_scalar(nb, o, t)
+            return c
+
+        def edge_cost(i: int, t_prev: str, t: str) -> float:
+            c = 0.0
+            for name in stages[i].inputs:
+                if name in prev_out[i]:
+                    nb = table[name].nbytes
+                    if t_prev == t:
+                        c += engine.marshal_scalar(nb, t)
+                    else:
+                        c += engine.transfer_scalar(nb, t_prev, t)
+            return c
+
+        def return_cost(t: str) -> float:
+            if t == topo.home:
+                return 0.0
+            # results ride the final RPC response home: no latency legs
+            return sum(
+                engine.transfer_scalar(table[r].nbytes, t, topo.home, piggyback=True)
+                for r in comp.results
+            )
+
+        dp = [{t: node_cost(0, t) for t in tiers}]
+        parent: List[Dict[str, str]] = [{}]
+        for i in range(1, n):
+            row: Dict[str, float] = {}
+            par: Dict[str, str] = {}
+            for t in tiers:
+                base = node_cost(i, t)
+                best_c = None
+                best_p = None
+                for t_prev in tiers:
+                    c = dp[i - 1][t_prev] + edge_cost(i, t_prev, t) + base
+                    if best_c is None or c < best_c:
+                        best_c = c
+                        best_p = t_prev
+                row[t] = best_c
+                par[t] = best_p
+            dp.append(row)
+            parent.append(par)
+
+        last = min(tiers, key=lambda t: dp[n - 1][t] + return_cost(t))
+        placements = [last]
+        for i in range(n - 1, 0, -1):
+            placements.append(parent[i][placements[-1]])
+        placements.reverse()
+        return engine.evaluate(comp, tuple(placements))
+
+
+PLANNERS = {
+    p.name: p
+    for p in (ExhaustivePlanner(), SingleCrossingPlanner(), ChainDPPlanner())
+}
+
+
+# Above this many candidate plans a linear chain goes to the DP even
+# inside the exhaustive budget — the DP is equally exact and O(n*k^2),
+# while exhaustive evaluate() calls grow as k^n (3^12 is already ~a
+# minute of planning).
+_DP_PREFERRED_ABOVE = 512
+
+
+def auto_planner(
+    comp: StagedComputation, engine: CostEngine, max_candidates: int
+):
+    """Exhaustive while the lattice is tiny; exact DP for chains as soon
+    as exhaustive search would be slow; the single-crossing family as
+    the general-case fallback."""
+    k = len(engine.placement_tiers())
+    n = len(comp.stages)
+    lattice = k**n
+    if lattice <= min(max_candidates, _DP_PREFERRED_ABOVE):
+        return PLANNERS["exhaustive"]
+    if ChainDPPlanner.applicable(comp):
+        return PLANNERS["chain_dp"]
+    if lattice <= max_candidates:
+        return PLANNERS["exhaustive"]
+    return PLANNERS["single_crossing"]

@@ -4,12 +4,14 @@ The paper connects its two machines with (i) Gigabit Ethernet and (ii)
 802.11 Wi-Fi, noting Wi-Fi "typically introduce[s] latency ranging from
 10-60 ms" and substantially lower bandwidth. The TPU entries let the same
 offload engine reason about intra-pod ICI and cross-pod DCN placement
-(serving/edge.py) — that is the production analogue of laptop<->server.
+(serving/edge.py) — that is the production analogue of laptop<->server —
+and the 5G/DCN pair forms the legs of the device->edge->cloud chain
+topology (sim.hardware.three_tier_environment).
 """
 
 from __future__ import annotations
 
-from repro.core.offload import Link
+from repro.core.topology import Link
 
 # Effective application-level throughput of GbE is ~117 MB/s (TCP).
 GIGABIT_ETHERNET = Link(

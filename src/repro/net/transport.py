@@ -6,6 +6,11 @@ actually moves (it is the same host), so executed simulations produce
 *bit-exact tracker output* while the clock reflects the modeled network —
 this is how sim/runtime.py runs the paper's experiments faithfully on one
 machine.
+
+All arithmetic delegates to the leg-level primitives of
+``core.costengine`` (the unified cost engine), so the executed path
+charges exactly the formulas the analytic planner prices; the link's
+jitter is drawn through ``Link.transfer_time(nbytes, rng)``.
 """
 
 from __future__ import annotations
@@ -15,7 +20,8 @@ from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.offload import Link, WrapperModel
+from repro.core.costengine import envelope_time, serialization_time, wire_time
+from repro.core.topology import Link, WrapperModel
 from repro.core.stages import pytree_nbytes
 
 
@@ -42,24 +48,14 @@ class Transport:
 
     def rpc_envelope_time(self) -> float:
         """Request + response wire latency for one remote invocation."""
-        t = 0.0
-        for _ in range(2):
-            t += max(
-                0.0,
-                float(self.rng.normal(self.link.latency, self.link.jitter))
-                if self.link.jitter > 0
-                else self.link.latency,
-            )
-        if self.wrapper is not None:
-            t += 2 * self.wrapper.call_overhead
-        return t
+        return envelope_time((self.link,), self.wrapper, self.rng)
 
     def payload_time(self, tree: Any, direction: str = "up") -> float:
         """Time to ship a pytree payload (serialization + wire)."""
         nbytes = pytree_nbytes(tree)
-        t = nbytes / self.link.bandwidth
+        t = wire_time(nbytes, (self.link,))
         if self.wrapper is not None:
-            t += 2 * nbytes / self.wrapper.serialization_bandwidth
+            t += serialization_time(nbytes, self.wrapper)
         self.log.append(TransferRecord(nbytes, t, direction))
         return t
 

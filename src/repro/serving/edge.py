@@ -5,8 +5,10 @@ per-frame optimization: a serially-dependent step with a small recurrent
 payload (the sampled token + per-step cache delta) and a heavy compute
 core (the layer stack). This module builds the byte/FLOP-annotated
 ``StagedComputation`` of one decode step for any assigned architecture
-and lets the Local/Forced/Auto policies place its stages across a thin
-client and an edge server (TPU pod), exactly as the paper places the
+and lets the Local/Forced/Auto policies place its stages across any
+tier topology — the paper's thin client -> edge server (TPU pod) pair,
+or a device -> edge GPU -> cloud TPU chain
+(sim.hardware.three_tier_environment), exactly as the paper places the
 hand tracker's four stages across laptop and server.
 
 The per-arch state payload is where the assigned architectures differ
@@ -25,7 +27,7 @@ from typing import Dict, List, Tuple
 
 from repro.configs.base import ArchConfig
 from repro.core import offload
-from repro.core.offload import Environment, PlanReport, Policy
+from repro.core.offload import EnvironmentLike, PlanReport, Policy
 from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
 
 
@@ -130,12 +132,20 @@ class EdgePlan:
 
 def plan_decode(
     cfg: ArchConfig,
-    env: Environment,
+    env: EnvironmentLike,
     policy: Policy = Policy.AUTO,
     batch: int = 1,
     granularity: str = "single_step",
+    num_stage_groups: int = 4,
 ) -> EdgePlan:
-    comp = build_decode_staged(cfg, batch)
+    """Place one decode step across the tiers of ``env`` (the two-tier
+    ``Environment`` shim or a full ``Topology`` chain/star).
+
+    ``num_stage_groups`` controls pipeline depth: the decode chain is a
+    linear StagedComputation, so at depths where the plan lattice
+    (k_tiers ** n_stages) outgrows exhaustive search AUTO switches to
+    the exact O(n*k^2) chain-DP planner."""
+    comp = build_decode_staged(cfg, batch, num_stage_groups)
     comp = comp.fused() if granularity == "single_step" else comp
     rep = offload.plan(comp, env, policy)
     return EdgePlan(
@@ -147,7 +157,7 @@ def plan_decode(
 
 
 def compare_archs(
-    cfgs: List[ArchConfig], env: Environment, batch: int = 1
+    cfgs: List[ArchConfig], env: EnvironmentLike, batch: int = 1
 ) -> Dict[str, Dict[str, float]]:
     """Token rates for Local/Forced/Auto per arch — the LLM Fig. 5."""
     out = {}

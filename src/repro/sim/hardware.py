@@ -17,7 +17,14 @@ from typing import Dict
 
 from repro.core import pso, tracker
 from repro.core.camera import Camera
-from repro.core.offload import Environment, Link, Policy, Tier, WrapperModel
+from repro.core.offload import (
+    Environment,
+    Link,
+    Policy,
+    Tier,
+    Topology,
+    WrapperModel,
+)
 from repro.core.stages import StagedComputation
 from repro.core.wrapper import paper_wrapper
 from repro.net import links
@@ -127,4 +134,36 @@ def edge_tpu_environment(client_tier: Tier = THIN_CLIENT_NO_GPU) -> Environment:
         link=links.FIVE_G_EDGE,
         wrapper=WrapperModel(call_overhead=0.2e-3, serialization_bandwidth=2e9),
         wrapped=True,
+    )
+
+
+# A metro-edge GPU box (workstation-class card racked near the 5G base
+# station): faster than any client, far slower than the cloud pod, one
+# cheap hop away — the middle rung of the AVEC-style hierarchy.
+EDGE_GPU = Tier(
+    name="edge_gpu",
+    accel_flops=9e12,
+    scalar_flops=50e9,
+    dispatch_overhead=30e-6,
+)
+
+
+def three_tier_environment(device: Tier = THIN_CLIENT_NO_GPU) -> Topology:
+    """device -> edge GPU -> cloud TPU chain (the multi-machine scaling
+    the paper flags as future work).
+
+    The plan lattice is 3^n, so AUTO routes long pipelines through the
+    chain-DP planner; the interesting trade is that the edge tier costs
+    one 5G hop while the cloud pod costs 5G + DCN but computes ~2x
+    faster."""
+    return Topology.chain(
+        (("device", device), ("edge", EDGE_GPU), ("cloud", TPU_V5E)),
+        (links.FIVE_G_EDGE, links.DCN),
+        # datacenter-grade marshalling: the local staging path must stay
+        # faster than remote serialization (zero-copy host buffers)
+        wrapper=WrapperModel(
+            call_overhead=0.2e-3,
+            serialization_bandwidth=2e9,
+            jni_bandwidth=8e9,
+        ),
     )

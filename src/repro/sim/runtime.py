@@ -3,8 +3,9 @@
 Two fidelities:
 
 * ``analytic_run`` — pure cost-model playback: per-frame loop times are
-  drawn from the offload plan (with link jitter), fed through the Fig. 3
-  frame-drop accounting. This generates Fig. 4 / Fig. 5.
+  drawn from the offload plan (resampling the exact latency legs the
+  cost engine recorded, so link jitter is reproduced leg-for-leg), fed
+  through the Fig. 3 frame-drop accounting. Generates Fig. 4 / Fig. 5.
 
 * ``executed_run`` — *actually executes* the JAX tracker on a synthetic
   RGBD sequence while charging simulated time for network/wrapper legs.
@@ -13,6 +14,10 @@ Two fidelities:
   This couples frame drops to tracking quality: dropped frames widen the
   inter-frame motion the PSO must cover, exactly the degradation path the
   paper describes.
+
+Both fidelities accept either the two-tier ``Environment`` shim or a
+full multi-tier ``Topology`` — placement and cost arithmetic live in
+``core.costengine`` either way.
 """
 
 from __future__ import annotations
@@ -25,10 +30,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import handmodel, offload, tracker
-from repro.core.offload import Environment, PlanReport, Policy
+from repro.core.offload import PlanReport, Policy, Topology
 from repro.core.stages import StagedComputation
-from repro.net.transport import Transport
 from repro.sim.clock import FrameLoop, LoopStats
+
+EnvironmentLike = offload.EnvironmentLike
 
 
 @dataclasses.dataclass
@@ -53,26 +59,16 @@ class SimResult:
         return self.stats.achieved_fps
 
 
-def _jittered_loop_time(
-    plan: PlanReport, env: Environment, rng: np.random.Generator
-) -> float:
-    """Resample the network legs of a plan with link jitter."""
-    if env.link.jitter <= 0.0 or plan.network_time == 0.0:
-        return plan.total_time
-    # Count latency legs embedded in network_time; re-draw them.
-    bytes_time = (plan.uplink_bytes + plan.downlink_bytes) / env.link.bandwidth
-    latency_time = max(plan.network_time - bytes_time, 0.0)
-    n_legs = max(1, round(latency_time / max(env.link.latency, 1e-9)))
-    jittered = sum(
-        max(0.0, rng.normal(env.link.latency, env.link.jitter))
-        for _ in range(n_legs)
-    )
-    return plan.compute_time + plan.wrapper_time + bytes_time + jittered
+def _network_name(env: EnvironmentLike) -> str:
+    """Label for reports: the shim's link name, or the topology's links."""
+    if isinstance(env, Topology):
+        return "+".join(l.name for l in env.links.values())
+    return env.link.name
 
 
 def analytic_run(
     comp: StagedComputation,
-    env: Environment,
+    env: EnvironmentLike,
     policy: Policy,
     granularity: str = "single_step",
     num_frames: int = 300,
@@ -89,9 +85,9 @@ def analytic_run(
     rng = np.random.default_rng(seed)
     loop = FrameLoop()
     stats = loop.run(
-        lambda i, gap: _jittered_loop_time(rep, env, rng), num_frames
+        lambda i, gap: rep.jittered_total(rng), num_frames
     )
-    return SimResult(stats, rep, policy, env.link.name, granularity)
+    return SimResult(stats, rep, policy, _network_name(env), granularity)
 
 
 @dataclasses.dataclass
@@ -104,7 +100,7 @@ class TrackingResult:
 
 def executed_run(
     cfg: tracker.TrackerConfig,
-    env: Environment,
+    env: EnvironmentLike,
     policy: Policy,
     depth_frames: jnp.ndarray,  # (T, H, W) observed depth sequence
     truth: jnp.ndarray,  # (T, 27) ground-truth configurations
@@ -131,7 +127,7 @@ def executed_run(
 
     loop = FrameLoop()
     stats = loop.run(
-        lambda i, gap: _jittered_loop_time(rep, env, rng),
+        lambda i, gap: rep.jittered_total(rng),
         int(depth_frames.shape[0]),
     )
 
@@ -151,7 +147,7 @@ def executed_run(
         ang_errs.append(ae)
         if pe > 0.05:
             lost += 1
-    sim = SimResult(stats, rep, policy, env.link.name, granularity)
+    sim = SimResult(stats, rep, policy, _network_name(env), granularity)
     return TrackingResult(
         sim=sim,
         mean_pos_error=float(np.mean(pos_errs)) if pos_errs else float("nan"),
@@ -162,7 +158,7 @@ def executed_run(
 
 def experiment_grid(
     comp: StagedComputation,
-    environments: Dict[str, Environment],
+    environments: Dict[str, EnvironmentLike],
     policies: Tuple[Policy, ...] = (Policy.FORCED, Policy.AUTO),
     granularities: Tuple[str, ...] = ("single_step", "multi_step"),
     num_frames: int = 300,

@@ -1,0 +1,481 @@
+"""Topology/cost-engine/planner stack: N-tier generalization.
+
+Covers the refactor's contracts:
+* the two-tier ``Environment`` shim reproduces the original hard-wired
+  client/server arithmetic bit-for-bit (a literal replica of the seed
+  ``evaluate_plan`` is kept here as the reference);
+* the chain-DP planner matches exhaustive search on every small
+  topology/chain it claims to handle exactly;
+* 3-tier chains plan end-to-end through Policy.AUTO;
+* per-leg latency records make jitter resampling exact.
+"""
+
+import itertools
+import random
+
+import pytest
+
+from repro.core import offload
+from repro.core.costengine import CostEngine
+from repro.core.offload import (
+    Environment,
+    Link,
+    Policy,
+    Tier,
+    Topology,
+    WrapperModel,
+)
+from repro.core.planners import PLANNERS, ChainDPPlanner
+from repro.core.stages import CLIENT, SERVER, DataItem, Stage, StagedComputation
+from repro.net.transport import Transport
+
+
+# ---------------------------------------------------------------------------
+# fixtures / builders
+# ---------------------------------------------------------------------------
+
+
+def _comp(n_stages=4, frame_bytes=500_000, flops=5e9):
+    """The seed test_offload.py computation, verbatim."""
+    sources = (
+        DataItem("frame", frame_bytes, CLIENT),
+        DataItem("h_prev", 108, CLIENT),
+    )
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 20_000)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=flops / n_stages,
+                inputs=(prev, "h_prev") if i == 0 else (prev,),
+                outputs=(out,),
+                parallel_fraction=0.95,
+            )
+        )
+        prev = out.name
+    return StagedComputation("test", sources, tuple(stages), (prev,))
+
+
+def _env(lat=0.3e-3, bw=117e6, fast=2e12, slow=0.3e12):
+    return Environment(
+        client=Tier("client", slow, 30e9),
+        server=Tier("server", fast, 60e9),
+        link=Link("l", bw, lat),
+        wrapper=WrapperModel(),
+    )
+
+
+def _chain_comp(n_stages, rng=None, tail_source=True):
+    """A linear chain: frame -> s0 -> ... -> s{n-1}, optional late source."""
+    rnd = rng or random.Random(0)
+    sources = [DataItem("frame", rnd.randrange(1_000, 800_000), CLIENT)]
+    if tail_source:
+        sources.append(DataItem("seed", rnd.randrange(8, 256), CLIENT))
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", rnd.randrange(64, 120_000))
+        inputs = (prev,)
+        if tail_source and i == n_stages - 1:
+            inputs = (prev, "seed")
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=rnd.uniform(1e8, 4e9),
+                inputs=inputs,
+                outputs=(out,),
+                parallel_fraction=rnd.uniform(0.8, 1.0),
+            )
+        )
+        prev = out.name
+    return StagedComputation("chain", tuple(sources), tuple(stages), (prev,))
+
+
+def _rand_tier(name, rnd):
+    return Tier(
+        name,
+        accel_flops=rnd.uniform(0.05e12, 5e12),
+        scalar_flops=rnd.uniform(10e9, 80e9),
+        dispatch_overhead=rnd.uniform(10e-6, 200e-6),
+    )
+
+
+def _rand_link(name, rnd):
+    return Link(
+        name,
+        bandwidth=rnd.uniform(5e6, 1e9),
+        latency=rnd.uniform(1e-4, 40e-3),
+    )
+
+
+def _rand_topology(k, rnd, shape="chain"):
+    tiers = [(f"t{i}", _rand_tier(f"t{i}", rnd)) for i in range(k)]
+    if shape == "chain" or k == 2:
+        return Topology.chain(
+            tiers,
+            [_rand_link(f"l{i}", rnd) for i in range(k - 1)],
+            wrapper=WrapperModel(),
+        )
+    return Topology.star(
+        tiers[0],
+        [(n, t, _rand_link(f"l{n}", rnd)) for n, t in tiers[1:]],
+        wrapper=WrapperModel(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bit-for-bit compatibility with the seed two-tier arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _seed_evaluate_plan(comp, placements, env):
+    """Literal replica of the pre-refactor evaluate_plan (hard-wired
+    client/server), kept as the golden reference."""
+    comp.validate()
+    table = comp.item_table()
+    residency = {i.name: {i.origin} for i in comp.sources}
+
+    compute_t = 0.0
+    wrapper_t = 0.0
+    network_t = 0.0
+    up_bytes = 0
+    down_bytes = 0
+
+    if not env.wrapped and any(p == SERVER for p in placements):
+        raise ValueError("native cannot offload")
+
+    def _stage_compute_time(stage, tier):
+        par = stage.flops * stage.parallel_fraction
+        ser = stage.flops - par
+        accel = tier.accel_flops if tier.has_accelerator else tier.scalar_flops
+        return par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+
+    def _ship(nbytes, to_server):
+        nonlocal wrapper_t, network_t, up_bytes, down_bytes
+        wrapper_t += 2 * (nbytes / env.wrapper.serialization_bandwidth)
+        network_t += nbytes / env.link.bandwidth
+        if to_server:
+            up_bytes += nbytes
+        else:
+            down_bytes += nbytes
+
+    for stage, side in zip(comp.stages, placements):
+        tier = env.server if side == SERVER else env.client
+        if env.wrapped:
+            if side == SERVER:
+                wrapper_t += 2 * env.wrapper.call_overhead
+                network_t += 2 * env.link.latency
+            else:
+                wrapper_t += env.wrapper.call_overhead
+        for name in stage.inputs:
+            if side not in residency[name]:
+                item = table[name]
+                if side == CLIENT:
+                    network_t += env.link.latency
+                _ship(item.nbytes, to_server=(side == SERVER))
+                residency[name].add(side)
+            elif env.wrapped and side == CLIENT:
+                wrapper_t += table[name].nbytes / env.wrapper.jni_bandwidth
+        compute_t += _stage_compute_time(stage, tier)
+        for o in stage.outputs:
+            residency[o.name] = {side}
+
+    for rname in comp.results:
+        if CLIENT not in residency[rname]:
+            _ship(table[rname].nbytes, to_server=False)
+            residency[rname].add(CLIENT)
+
+    total = compute_t + wrapper_t + network_t
+    return (total, compute_t, wrapper_t, network_t, up_bytes, down_bytes)
+
+
+@pytest.mark.parametrize("lat,bw", [(0.3e-3, 117e6), (20e-3, 6e6)])
+def test_two_tier_shim_bit_for_bit(lat, bw):
+    """Every plan of the seed 4-stage lattice prices identically (==,
+    not approx) through the topology engine."""
+    comp = _comp()
+    env = _env(lat=lat, bw=bw)
+    for placements in itertools.product((CLIENT, SERVER), repeat=4):
+        rep = offload.evaluate_plan(comp, placements, env)
+        ref = _seed_evaluate_plan(comp, placements, env)
+        assert (
+            rep.total_time,
+            rep.compute_time,
+            rep.wrapper_time,
+            rep.network_time,
+            rep.uplink_bytes,
+            rep.downlink_bytes,
+        ) == ref
+
+
+def test_two_tier_shim_bit_for_bit_fused():
+    comp = _comp().fused()
+    env = _env()
+    for placements in ((CLIENT,), (SERVER,)):
+        rep = offload.evaluate_plan(comp, placements, env)
+        assert rep.total_time == _seed_evaluate_plan(comp, placements, env)[0]
+
+
+# ---------------------------------------------------------------------------
+# chain-DP vs exhaustive
+# ---------------------------------------------------------------------------
+
+
+def test_chain_dp_matches_exhaustive_small_topologies():
+    """Property: on every <=4-stage chain over <=3-tier topologies
+    (lattice <= 3^4 = 81 <= 2^12 plans) the DP optimum equals the
+    exhaustive optimum."""
+    rnd = random.Random(0xC0FFEE)
+    cases = 0
+    for _ in range(40):
+        k = rnd.choice((2, 2, 3, 3))
+        shape = rnd.choice(("chain", "star"))
+        n = rnd.randrange(2, 5)
+        topo = _rand_topology(k, rnd, shape)
+        comp = _chain_comp(n, rnd, tail_source=rnd.random() < 0.5)
+        assert ChainDPPlanner.applicable(comp)
+        engine = CostEngine(topo)
+        ex = PLANNERS["exhaustive"].plan(comp, engine)
+        dp = PLANNERS["chain_dp"].plan(comp, engine)
+        assert dp.total_time <= ex.total_time * (1 + 1e-9) + 1e-15
+        assert ex.total_time <= dp.total_time * (1 + 1e-9) + 1e-15
+        cases += 1
+    assert cases == 40
+
+
+def test_chain_dp_matches_exhaustive_deterministic_plan():
+    """On a clearly non-degenerate case the DP returns the same argmin
+    placements, not just the same cost."""
+    topo = Topology.chain(
+        (
+            ("device", Tier("device", 8e9, 8e9, has_accelerator=False)),
+            ("edge", Tier("edge", 1e12, 40e9)),
+            ("cloud", Tier("cloud", 5e12, 60e9)),
+        ),
+        (Link("5g", 60e6, 8e-3), Link("dcn", 25e9, 10e-6)),
+        wrapper=WrapperModel(),
+    )
+    comp = _chain_comp(4, random.Random(7))
+    engine = CostEngine(topo)
+    ex = PLANNERS["exhaustive"].plan(comp, engine)
+    dp = PLANNERS["chain_dp"].plan(comp, engine)
+    assert dp.placements == ex.placements
+    assert dp.total_time == ex.total_time
+
+
+def test_chain_dp_rejects_non_chains():
+    """Residency-reusing computations fall outside the DP's domain."""
+    src = DataItem("frame", 1_000_000, CLIENT)
+    stages = (
+        Stage("a", 1e9, ("frame",), (DataItem("y1", 10),), 0.9),
+        Stage("b", 1e9, ("frame", "y1"), (DataItem("y2", 10),), 0.9),
+    )
+    comp = StagedComputation("t", (src,), stages, ("y2",))
+    assert not ChainDPPlanner.applicable(comp)
+    with pytest.raises(ValueError):
+        PLANNERS["chain_dp"].plan(comp, CostEngine(_env().as_topology()))
+
+
+def test_chain_dp_handles_24_stage_chain():
+    """The long-pipeline case exhaustive search cannot touch (2^24
+    plans): DP plans it and never loses to the single-crossing family."""
+    comp = _chain_comp(24, random.Random(3))
+    engine = CostEngine(_env().as_topology())
+    dp = PLANNERS["chain_dp"].plan(comp, engine)
+    sc = PLANNERS["single_crossing"].plan(comp, engine)
+    assert dp.total_time <= sc.total_time + 1e-12
+    # AUTO dispatch at n=24 routes through the DP (lattice 2^24 > 2^20)
+    auto = offload.plan(comp, _env(), Policy.AUTO)
+    assert auto.total_time == dp.total_time
+
+
+# ---------------------------------------------------------------------------
+# 3-tier end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_three_tier_chain_plans_via_auto():
+    from repro.sim import hardware
+
+    topo = hardware.three_tier_environment()
+    comp = _chain_comp(6, random.Random(11))
+    rep = offload.plan(comp, topo, Policy.AUTO)
+    assert set(rep.placements) <= {"device", "edge", "cloud"}
+    local = offload.plan(comp, topo, Policy.LOCAL)
+    forced = offload.plan(comp, topo, Policy.FORCED)
+    assert rep.total_time <= local.total_time + 1e-12
+    assert rep.total_time <= forced.total_time + 1e-12
+    # FORCED targets the fastest remote tier of the chain
+    assert set(forced.placements) == {"cloud"}
+
+
+def test_three_tier_llm_decode_deep_pipeline():
+    """serving/edge.py's long decode pipeline is tractable at k=3 via
+    the chain DP (3^18 candidate plans — far beyond exhaustive)."""
+    from repro.configs import registry
+    from repro.serving import edge
+    from repro.sim import hardware
+
+    topo = hardware.three_tier_environment()
+    ep = edge.plan_decode(
+        registry.get("gemma-2b"),
+        topo,
+        Policy.AUTO,
+        granularity="multi_step",
+        num_stage_groups=16,
+    )
+    assert len(ep.report.placements) == 18  # embed + 16 groups + head
+    assert set(ep.report.placements) <= {"device", "edge", "cloud"}
+    assert ep.tokens_per_second > 0
+
+
+def test_multi_hop_transfer_charges_every_leg():
+    """Shipping device->cloud crosses both links: wire time on each leg,
+    envelope latency on each leg, serialization at the ends only."""
+    wrapper = WrapperModel()
+    l1 = Link("hop1", 10e6, 5e-3)
+    l2 = Link("hop2", 100e6, 1e-3)
+    topo = Topology.chain(
+        (
+            ("device", Tier("device", 1e9, 1e9, 0.0, has_accelerator=False)),
+            ("edge", Tier("edge", 1e12, 40e9, 0.0)),
+            ("cloud", Tier("cloud", 5e12, 60e9, 0.0)),
+        ),
+        (l1, l2),
+        wrapper=wrapper,
+    )
+    nb = 1_000_000
+    comp = StagedComputation(
+        "hop",
+        (DataItem("x", nb, "device"),),
+        (Stage("s0", 1e6, ("x",), (DataItem("y", 10),), 1.0),),
+        ("y",),
+    )
+    rep = CostEngine(topo).evaluate(comp, ("cloud",))
+    # envelope: 2 legs per link; payload piggybacks (no extra latency)
+    assert [l.link for l in rep.legs] == ["hop1", "hop1", "hop2", "hop2"]
+    expected_net = (
+        2 * l1.latency + 2 * l2.latency  # envelope
+        + nb / l1.bandwidth + nb / l2.bandwidth  # frame up, both legs
+        + 10 / l1.bandwidth + 10 / l2.bandwidth  # result down, both legs
+    )
+    assert rep.network_time == pytest.approx(expected_net, rel=1e-12)
+    # serialization: both ends, both transfers; envelope: 2 call overheads
+    assert rep.wrapper_time == pytest.approx(
+        2 * wrapper.call_overhead + 2 * (nb + 10) / wrapper.serialization_bandwidth,
+        rel=1e-12,
+    )
+    # bytes are accounted per wire hop: the frame crosses two legs away
+    # from home, the result two legs toward it
+    assert rep.uplink_bytes == 2 * nb and rep.downlink_bytes == 2 * 10
+
+    # an inter-remote hop moving toward home (cloud -> edge) is downlink
+    comp2 = StagedComputation(
+        "hop2",
+        (DataItem("x", nb, "device"),),
+        (
+            Stage("s0", 1e6, ("x",), (DataItem("y", 50_000),), 1.0),
+            Stage("s1", 1e6, ("y",), (DataItem("z", 10),), 1.0),
+        ),
+        ("z",),
+    )
+    rep2 = CostEngine(topo).evaluate(comp2, ("cloud", "edge"))
+    assert rep2.uplink_bytes == 2 * nb  # device -> cloud, two hops up
+    assert rep2.downlink_bytes == 50_000 + 10  # cloud -> edge, edge -> device
+
+
+# ---------------------------------------------------------------------------
+# exact jitter resampling from per-leg records
+# ---------------------------------------------------------------------------
+
+
+def test_legs_account_for_all_latency():
+    comp = _comp()
+    env = _env(lat=20e-3)
+    rep = offload.plan(comp, env, Policy.FORCED)
+    # 4 remote invocations x 2 envelope legs; payloads piggyback
+    assert len(rep.legs) == 8
+    bytes_time = (rep.uplink_bytes + rep.downlink_bytes) / env.link.bandwidth
+    assert sum(l.latency for l in rep.legs) + bytes_time == pytest.approx(
+        rep.network_time, rel=1e-12
+    )
+
+
+def test_jittered_total_exact_and_deterministic():
+    import numpy as np
+
+    comp = _comp()
+    # zero jitter: resampling is the identity
+    rep = offload.plan(comp, _env(), Policy.FORCED)
+    assert rep.jittered_total(np.random.default_rng(0)) == rep.total_time
+
+    # jittered link: resampling replaces exactly the latency legs
+    env = Environment(
+        client=_env().client,
+        server=_env().server,
+        link=Link("wifi", 6e6, 20e-3, jitter=12e-3),
+        wrapper=WrapperModel(),
+    )
+    rep = offload.plan(comp, env, Policy.FORCED)
+    rng = np.random.default_rng(1)
+    draws = [rep.jittered_total(rng) for _ in range(200)]
+    floor = rep.total_time - sum(l.latency for l in rep.legs)
+    assert all(d >= floor - 1e-12 for d in draws)
+    mean = sum(draws) / len(draws)
+    assert mean == pytest.approx(rep.total_time, rel=0.15)
+
+    # all-local plan records no legs => identity
+    local = offload.plan(comp, env, Policy.LOCAL)
+    assert local.legs == ()
+    assert local.jittered_total(rng) == local.total_time
+
+
+def test_link_transfer_time_rng_is_wired():
+    import numpy as np
+
+    link = Link("wifi", 6e6, 20e-3, jitter=12e-3)
+    det = link.transfer_time(6_000_000)
+    assert det == pytest.approx(20e-3 + 1.0)
+    rng = np.random.default_rng(0)
+    samples = {link.transfer_time(6_000_000, rng) for _ in range(8)}
+    assert len(samples) > 1  # actually jittered
+    # Transport draws its envelope latency through the same path
+    tr = Transport(link, WrapperModel(), seed=0)
+    envs = {tr.rpc_envelope_time() for _ in range(8)}
+    assert len(envs) > 1
+
+
+# ---------------------------------------------------------------------------
+# topology validation
+# ---------------------------------------------------------------------------
+
+
+def test_topology_rejects_bad_graphs():
+    t = Tier("t", 1e12, 40e9)
+    with pytest.raises(ValueError):
+        Topology(tiers={"a": t}, links={}, home="missing")
+    with pytest.raises(ValueError):
+        Topology(
+            tiers={"a": t, "b": t},
+            links={("a", "zz"): Link("l", 1e6, 1e-3)},
+            home="a",
+        )
+    with pytest.raises(ValueError):  # disconnected
+        Topology(tiers={"a": t, "b": t}, links={}, home="a")
+    topo = Topology.two_tier(t, t, Link("l", 1e6, 1e-3))
+    with pytest.raises(ValueError):  # unknown placement tier
+        CostEngine(topo).evaluate(_comp(1), ("nowhere",))
+
+
+def test_star_topology_routes_leaf_to_leaf_through_hub():
+    hub = ("dev", Tier("dev", 8e9, 8e9, has_accelerator=False))
+    spokes = [
+        ("edge_a", Tier("edge_a", 1e12, 40e9), Link("la", 50e6, 4e-3)),
+        ("edge_b", Tier("edge_b", 2e12, 40e9), Link("lb", 30e6, 9e-3)),
+    ]
+    topo = Topology.star(hub, spokes)
+    assert topo.path_tiers("edge_a", "edge_b") == ("edge_a", "dev", "edge_b")
+    assert [l.name for l in topo.path_links("edge_a", "edge_b")] == ["la", "lb"]
+    assert topo.primary_remote() == "edge_b"
