@@ -1,10 +1,19 @@
 """Paper Fig. 5: offloaded laptop->server over Ethernet/Wi-Fi,
-{Forced, Auto} x {Single-Step, Multi-Step}."""
+{Forced, Auto} x {Single-Step, Multi-Step} — plus the same grid over the
+device->edge->cloud chain (the three-tier benchmark trajectory the
+ROADMAP asks for)."""
 
 from __future__ import annotations
 
 from repro.core.offload import Policy
 from repro.sim import hardware, runtime
+
+
+def _plan_letters(placements) -> str:
+    # two-tier keeps the historical S/C letters; chain tiers use their
+    # leading letter (d/e/c for device/edge/cloud)
+    two_tier = {"server": "S", "client": "C"}
+    return "".join(two_tier.get(p, p[0]) for p in placements)
 
 
 def bench() -> list:
@@ -15,13 +24,23 @@ def bench() -> list:
         for pol in (Policy.FORCED, Policy.AUTO):
             for gran in ("single_step", "multi_step"):
                 r = runtime.analytic_run(comp, env, pol, gran, 300)
-                plan = "".join(
-                    "S" if p == "server" else "C" for p in r.plan.placements
-                )
                 rows.append((
                     f"fig5/{net}_{pol.value}_{gran}",
                     r.stats.mean_loop_time * 1e6,
-                    f"fps={r.fps:.1f};plan={plan};"
+                    f"fps={r.fps:.1f};plan={_plan_letters(r.plan.placements)};"
                     f"up_kb={r.plan.uplink_bytes / 1024:.0f}",
                 ))
+    # device -> edge GPU -> cloud TPU: the multi-tier trajectory. FORCED
+    # pins everything to the fastest remote tier; AUTO may split the
+    # pipeline across the chain.
+    topo = hardware.three_tier_environment()
+    for pol in (Policy.FORCED, Policy.AUTO):
+        for gran in ("single_step", "multi_step"):
+            r = runtime.analytic_run(comp, topo, pol, gran, 300)
+            rows.append((
+                f"fig5/three_tier_{pol.value}_{gran}",
+                r.stats.mean_loop_time * 1e6,
+                f"fps={r.fps:.1f};plan={_plan_letters(r.plan.placements)};"
+                f"up_kb={r.plan.uplink_bytes / 1024:.0f}",
+            ))
     return rows

@@ -1,0 +1,64 @@
+"""Fleet capacity sweeps: clients vs achieved fps / drop rate / p99.
+
+The Fig. 3 frame-drop accounting at fleet scale — how many paper-style
+thin clients a star of contended edge GPU boxes sustains, per dispatch
+policy.  ``python benchmarks/fleet_bench.py --smoke`` runs a reduced
+sweep as a CI health check.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.cluster import capacity_sweep
+from repro.core.offload import Policy
+from repro.sim import hardware
+
+
+def _sweep_rows(client_counts, num_frames) -> list:
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    rows = []
+    for dispatch in ("round_robin", "least_queue", "latency_weighted"):
+        pts = capacity_sweep(
+            topo,
+            comp,
+            client_counts,
+            num_frames=num_frames,
+            policy=Policy.AUTO,
+            dispatch=dispatch,
+        )
+        for p in pts:
+            r = p.result
+            rows.append((
+                f"fleet/{dispatch}_n{p.num_clients}",
+                r.mean_loop_time * 1e6,
+                f"fps={p.fps:.1f};drop={p.drop_rate:.3f};"
+                f"p99_ms={p.p99 * 1e3:.1f};replans={r.total_replans};"
+                f"cache_hit={r.cache.stats.hit_rate:.2f}",
+            ))
+    return rows
+
+
+def bench() -> list:
+    return _sweep_rows((1, 2, 4, 8, 16, 32), num_frames=300)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="reduced sweep (CI): fewer clients and frames",
+    )
+    args = ap.parse_args()
+    rows = (
+        _sweep_rows((1, 4, 8), num_frames=60) if args.smoke else bench()
+    )
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

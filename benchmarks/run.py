@@ -16,6 +16,7 @@ from benchmarks import (
     fig3_framedrop,
     fig4_overhead,
     fig5_network,
+    fleet_bench,
     kernel_bench,
     pso_throughput,
     roofline_bench,
@@ -33,6 +34,7 @@ MODULES = [
     ("roofline", roofline_bench),
     ("edge_llm", edge_llm),
     ("topology", topology_bench),
+    ("fleet", fleet_bench),
 ]
 
 

@@ -1,0 +1,30 @@
+"""Fleet-scale simulation: many thin clients vs contended edge servers.
+
+The paper proves one weak client + one strong server works; this package
+asks how many such clients a shared pool of edge servers sustains.  See
+``fleet.run_fleet`` / ``fleet.capacity_sweep`` for the front-end,
+``events`` for the discrete-event engine, ``dispatch`` for edge
+selection policies, and ``plancache`` for plan caching with
+drift-triggered incremental re-planning.
+"""
+
+from repro.cluster.dispatch import (  # noqa: F401
+    DISPATCH_POLICIES,
+    edge_subtopology,
+    make_dispatch,
+)
+from repro.cluster.events import EventQueue, LinkTable, SlotServer  # noqa: F401
+from repro.cluster.fleet import (  # noqa: F401
+    ClientResult,
+    FleetResult,
+    LinkDrift,
+    SweepPoint,
+    capacity_sweep,
+    run_fleet,
+)
+from repro.cluster.plancache import (  # noqa: F401
+    DriftDetector,
+    PlanCache,
+    comp_signature,
+    topology_fingerprint,
+)

@@ -1,0 +1,128 @@
+"""Dispatch policies: which edge box serves which client.
+
+The fleet topology is a star — every client looks like the hub (the
+paper's laptop), and several edge servers hang off it on their own
+links.  Each client's *plan* is still the paper's two-machine problem:
+home tier + one edge server; dispatch decides which edge that is.
+
+* ``round_robin``      — static striping, the baseline every serving
+  stack starts with.
+* ``least_queue``      — pick the edge with the fewest in-flight plus
+  assigned requests (join-the-shortest-queue).  Today dispatch runs
+  once per client at admission (t=0), where the live ``SlotServer``
+  load term is still zero and this reduces to assignment-count
+  striping; the live term starts mattering with mid-run re-dispatch
+  (multi-edge migration — a ROADMAP follow-up).
+* ``latency_weighted`` — price a plan against every edge with the
+  occupancy-aware cost engine (queueing inflation from current
+  assignments) and take the argmin predicted step latency.  This is the
+  paper's RAPID "should I offload?" decision extended to "offload
+  *where*?".
+
+All ties break on edge name, so every policy is deterministic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.cluster.events import LinkTable, SlotServer
+from repro.core import offload
+from repro.core.offload import Policy, Topology
+from repro.core.stages import StagedComputation
+
+
+def edge_subtopology(
+    topo: Topology, edge_name: str, link_table: Optional[LinkTable] = None
+) -> Topology:
+    """The two-tier view one client plans against: home + one edge.
+
+    With ``link_table`` the link reflects current (possibly drifted)
+    conditions, so re-planning calibrates against what the client will
+    actually experience.
+    """
+    link = topo.link_between(topo.home, edge_name)
+    if link_table is not None:
+        link = link_table.get(link.name)
+    return Topology(
+        tiers={
+            topo.home: topo.tier(topo.home),
+            edge_name: topo.tier(edge_name),
+        },
+        links={(topo.home, edge_name): link},
+        home=topo.home,
+        wrapper=topo.wrapper,
+        wrapped=topo.wrapped,
+    )
+
+
+@dataclasses.dataclass
+class DispatchContext:
+    """What a policy may look at when placing a client."""
+
+    topo: Topology
+    comp: StagedComputation
+    policy: Policy
+    edges: List[str]
+    servers: Dict[str, SlotServer]
+    link_table: LinkTable
+    assignments: Dict[str, int]  # edge -> clients currently assigned
+    now: float = 0.0
+
+
+class RoundRobinDispatch:
+    name = "round_robin"
+
+    def __init__(self) -> None:
+        self._next = 0
+
+    def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        edge = ctx.edges[self._next % len(ctx.edges)]
+        self._next += 1
+        return edge
+
+
+class LeastQueueDispatch:
+    name = "least_queue"
+
+    def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        return min(
+            ctx.edges,
+            key=lambda e: (
+                ctx.servers[e].load(ctx.now) + ctx.assignments.get(e, 0),
+                e,
+            ),
+        )
+
+
+class LatencyWeightedDispatch:
+    name = "latency_weighted"
+
+    def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        def predicted(edge: str) -> float:
+            sub = edge_subtopology(ctx.topo, edge, ctx.link_table)
+            rep = offload.plan(
+                ctx.comp,
+                sub,
+                ctx.policy,
+                occupancy={edge: ctx.assignments.get(edge, 0)},
+            )
+            return rep.total_time
+
+        return min(ctx.edges, key=lambda e: (predicted(e), e))
+
+
+DISPATCH_POLICIES = {
+    cls.name: cls
+    for cls in (RoundRobinDispatch, LeastQueueDispatch, LatencyWeightedDispatch)
+}
+
+
+def make_dispatch(name: str):
+    if name not in DISPATCH_POLICIES:
+        raise ValueError(
+            f"unknown dispatch policy {name!r}; choose from "
+            f"{sorted(DISPATCH_POLICIES)}"
+        )
+    return DISPATCH_POLICIES[name]()

@@ -1,0 +1,179 @@
+"""Discrete-event primitives for the fleet simulator.
+
+The paper's experiment is one client against a dedicated server; the
+fleet simulator replays N copies of that client against *shared* edge
+servers, so per-request latency depends on who else is in the queue.
+Three primitives make that exact and deterministic:
+
+* :class:`EventQueue` — a time-ordered event heap.  Ties are broken by
+  scheduling order (a monotone sequence number), so a run is a pure
+  function of its inputs and seeds; there is no wall-clock anywhere.
+* :class:`SlotServer` — a FIFO service resource with ``capacity``
+  identical slots (the virtualized-accelerator model: an edge box that
+  can serve ``capacity`` tracker requests concurrently at full speed).
+  Because the event queue pops in time order, offering admissions at
+  their arrival events yields exact FIFO-c queueing, not an averaged
+  queueing formula.
+* :class:`LinkTable` — the mutable ground-truth network conditions.
+  Requests resample every :class:`~repro.core.costengine.LatencyLeg`
+  the cost engine recorded for their plan against the *current* table,
+  so per-request latencies are exact draws, and injected link drift
+  makes observed legs deviate from the plan's predictions — the signal
+  the plan cache's drift detector watches.
+
+``LinkTable.sample_plan_latency`` intentionally replicates the exact
+floating-point operation order of ``PlanReport.jittered_total`` so that
+an undrifted single-client fleet reproduces ``sim.runtime.analytic_run``
+bit-for-bit (asserted in tests/test_cluster.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.costengine import PlanReport
+from repro.core.topology import Link, Topology, sample_latency
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable[[], None] = dataclasses.field(compare=False)
+
+
+class EventQueue:
+    """Deterministically ordered event heap with a simulated clock."""
+
+    def __init__(self) -> None:
+        self._heap: List[_Event] = []
+        self._seq = 0
+        self.now = 0.0
+
+    def schedule(self, time: float, fn: Callable[[], None]) -> None:
+        # clamp ulp-level rounding of canonical finish times (see
+        # fleet.finish) so events never land microscopically in the past
+        heapq.heappush(self._heap, _Event(max(time, self.now), self._seq, fn))
+        self._seq += 1
+
+    def run(self) -> None:
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            self.now = ev.time
+            ev.fn()
+
+
+class SlotServer:
+    """A FIFO resource with ``capacity`` identical service slots.
+
+    Admissions MUST be offered in nondecreasing time order (the event
+    queue guarantees this when callers admit at their arrival events);
+    each admitted request occupies one slot for exactly its service
+    time.  Tracks queue depth and utilization for dispatch policies and
+    reports.
+    """
+
+    def __init__(self, name: str, capacity: int):
+        self.name = name
+        self.capacity = max(int(capacity), 1)
+        self._slots = [0.0] * self.capacity  # slot free times (min-heap)
+        heapq.heapify(self._slots)
+        self._finishes: List[float] = []  # in-flight request finish times
+        self.admitted = 0
+        self.busy_time = 0.0
+        self.total_wait = 0.0
+        self._last_admit = float("-inf")
+
+    def load(self, now: float) -> int:
+        """Requests admitted but not yet finished at ``now``."""
+        while self._finishes and self._finishes[0] <= now:
+            heapq.heappop(self._finishes)
+        return len(self._finishes)
+
+    def admit(self, arrival: float, service: float) -> Tuple[float, float]:
+        """Queue one request; returns (service_start, service_finish)."""
+        if arrival < self._last_admit:
+            raise ValueError(
+                f"{self.name}: admissions out of order "
+                f"({arrival} < {self._last_admit})"
+            )
+        self._last_admit = arrival
+        free = heapq.heappop(self._slots)
+        start = max(arrival, free)
+        finish = start + service
+        heapq.heappush(self._slots, finish)
+        heapq.heappush(self._finishes, finish)
+        self.admitted += 1
+        self.busy_time += service
+        self.total_wait += start - arrival
+        return start, finish
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.admitted if self.admitted else 0.0
+
+
+# one (link name, drawn latency) pair per plan leg — what a client
+# actually observed, fed to the drift detector
+ObservedLegs = Tuple[Tuple[str, float], ...]
+
+
+class LinkTable:
+    """Mutable ground-truth link conditions, seeded from a topology.
+
+    Drift events overwrite entries in place; plan sampling and
+    re-planning both read the current state, so a re-planned client is
+    calibrated against the conditions it will actually experience.
+    """
+
+    def __init__(self, topo: Topology):
+        self._links: Dict[str, Link] = {
+            link.name: link for link in topo.links.values()
+        }
+
+    def get(self, name: str) -> Link:
+        return self._links[name]
+
+    def set(
+        self,
+        name: str,
+        latency: Optional[float] = None,
+        jitter: Optional[float] = None,
+        bandwidth: Optional[float] = None,
+    ) -> Link:
+        old = self._links[name]
+        new = Link(
+            name=name,
+            bandwidth=old.bandwidth if bandwidth is None else bandwidth,
+            latency=old.latency if latency is None else latency,
+            jitter=old.jitter if jitter is None else jitter,
+        )
+        self._links[name] = new
+        return new
+
+    def sample_plan_latency(
+        self, plan: PlanReport, rng
+    ) -> Tuple[float, ObservedLegs]:
+        """One request's latency: the plan total with every recorded leg
+        re-drawn from current conditions.
+
+        Replicates ``PlanReport.jittered_total``'s float operation order
+        (subtract the charged latency, add the draw, leg by leg), so
+        with undrifted links the result — and the rng consumption — is
+        bit-identical to the analytic simulator's.
+        """
+        t = plan.total_time
+        observed: List[Tuple[str, float]] = []
+        for leg in plan.legs:
+            link = self._links.get(leg.link)
+            if link is None:
+                lat, jit = leg.latency, leg.jitter
+            else:
+                lat, jit = link.latency, link.jitter
+            t -= leg.latency
+            draw = sample_latency(lat, jit, rng)
+            t += draw
+            observed.append((leg.link, draw))
+        return t, tuple(observed)

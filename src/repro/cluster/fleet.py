@@ -1,0 +1,413 @@
+"""Fleet simulation: N thin clients vs a star of contended edge servers.
+
+Each client replays the paper's deployment — a 30 fps camera, a serially
+dependent per-frame tracker step, an offload plan priced by the cost
+engine — but the edge servers are *shared*: every offloaded stage
+occupies a FIFO service slot (``events.SlotServer``) for exactly the
+compute time its plan charged to that tier, so queueing delay emerges
+from the event interleaving instead of an averaged formula.
+
+Per-request latency is exact: the plan's recorded latency legs are
+re-drawn against current link conditions (``events.LinkTable``), which
+with undrifted links is bit-identical — in value and rng consumption —
+to ``PlanReport.jittered_total``, so a single client against a
+capacity-1 edge reproduces ``sim.runtime.analytic_run`` frame-for-frame
+(the golden test in tests/test_cluster.py).
+
+The adaptive loop: plans come from a shared ``plancache.PlanCache``
+(N identical clients cost O(num_edges) plans); each client's
+``plancache.DriftDetector`` watches the leg latencies its requests
+actually drew, and when they drift past the threshold only that client
+re-plans, against the drifted link — a cache miss by fingerprint,
+leaving every other client's cached plan untouched.
+
+Timing model per processed frame (documented approximation): all
+non-service time — home compute, wrapper, uplink/downlink wire and
+latency — is charged *before* the request reaches its first contended
+tier; the request then holds one slot per remote tier, in placement
+order, for that tier's compute share.  Total frame latency is therefore
+``resampled plan total + sum of queue waits``, which keeps the
+uncontended case exactly the analytic model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.dispatch import (
+    DispatchContext,
+    edge_subtopology,
+    make_dispatch,
+)
+from repro.cluster.events import EventQueue, LinkTable, SlotServer
+from repro.cluster.plancache import (
+    DriftDetector,
+    PlanCache,
+    topology_fingerprint,
+)
+from repro.core.costengine import PlanReport
+from repro.core.offload import Policy, Topology
+from repro.core.stages import StagedComputation
+from repro.sim.clock import CAMERA_FPS, FrameEvent, LoopStats
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkDrift:
+    """Inject new conditions on one link at a simulated time.
+
+    ``latency``/``jitter`` take effect on every subsequent request draw
+    (the per-leg resampling reads the live link table).  ``bandwidth``
+    only enters through *re-planning*: wire time is baked into a plan's
+    total, so a bandwidth change is invisible until something (e.g. a
+    simultaneous latency drift) triggers a re-plan against the updated
+    link — at which point the new plan prices the new bandwidth."""
+
+    time: float
+    link: str
+    latency: Optional[float] = None
+    jitter: Optional[float] = None
+    bandwidth: Optional[float] = None
+
+
+@dataclasses.dataclass
+class ClientResult:
+    client: int
+    edge: str
+    stats: LoopStats
+    plan: PlanReport
+    replans: int
+    total_wait: float  # summed queue wait over processed frames
+
+    @property
+    def mean_wait(self) -> float:
+        n = len(self.stats.processed)
+        return self.total_wait / n if n else 0.0
+
+
+@dataclasses.dataclass
+class EdgeLoad:
+    name: str
+    capacity: int
+    clients: int
+    admitted: int
+    busy_time: float
+    mean_wait: float
+
+
+@dataclasses.dataclass
+class FleetResult:
+    clients: List[ClientResult]
+    edges: List[EdgeLoad]
+    cache: PlanCache
+    num_frames: int
+    duration: float
+
+    @property
+    def drop_rate(self) -> float:
+        total = sum(c.stats.total_frames for c in self.clients)
+        dropped = sum(c.stats.dropped for c in self.clients)
+        return dropped / total if total else 0.0
+
+    @property
+    def mean_achieved_fps(self) -> float:
+        if not self.clients:
+            return 0.0
+        return sum(c.stats.achieved_fps for c in self.clients) / len(self.clients)
+
+    @property
+    def mean_loop_time(self) -> float:
+        times = self._loop_times()
+        return sum(times) / len(times) if times else 0.0
+
+    @property
+    def p99_loop_time(self) -> float:
+        return self.loop_time_percentile(0.99)
+
+    @property
+    def total_replans(self) -> int:
+        return sum(c.replans for c in self.clients)
+
+    def _loop_times(self) -> List[float]:
+        return [
+            ev.finish - ev.start
+            for c in self.clients
+            for ev in c.stats.processed
+        ]
+
+    def loop_time_percentile(self, q: float) -> float:
+        times = sorted(self._loop_times())
+        if not times:
+            return 0.0
+        idx = min(len(times) - 1, max(0, math.ceil(q * len(times)) - 1))
+        return times[idx]
+
+
+class _Client:
+    """One thin client's frame loop, replaying ``sim.clock.FrameLoop``'s
+    exact drop/supersede arithmetic against the shared event clock."""
+
+    def __init__(
+        self, idx: int, rng, edge: str, plan: PlanReport, home: str, plan_fp
+    ):
+        self.idx = idx
+        self.rng = rng
+        self.edge = edge
+        self.home = home
+        self.set_plan(plan, plan_fp)
+        self.events: List[FrameEvent] = []
+        self.t_free = 0.0
+        self.last_processed = -1
+        self.next_i = 0
+        self.replans = 0
+        self.total_wait = 0.0
+        self.drifted = False
+        self.frames_since_probe = 0
+        # in-flight frame: (index, arrival, start, sampled_total, observed)
+        self.pending: Optional[Tuple[int, float, float, float, tuple]] = None
+
+    def set_plan(self, plan: PlanReport, plan_fp) -> None:
+        self.plan = plan
+        self.plan_fp = plan_fp  # link conditions the plan was priced under
+        self.visits: Tuple[Tuple[str, float], ...] = tuple(
+            (tier, t) for tier, t in plan.compute_by_tier if tier != self.home
+        )
+        self.service_total = sum(t for _, t in self.visits)
+
+
+def run_fleet(
+    topo: Topology,
+    comp: StagedComputation,
+    num_clients: int,
+    num_frames: int = 300,
+    policy: Policy = Policy.AUTO,
+    dispatch: str = "round_robin",
+    granularity: str = "single_step",
+    planner: Optional[str] = None,
+    seed: int = 0,
+    camera_fps: float = CAMERA_FPS,
+    cache: Optional[PlanCache] = None,
+    drifts: Sequence[LinkDrift] = (),
+    drift_threshold: float = 0.5,
+    drift_window: int = 16,
+    drift_min_samples: int = 8,
+    probe_every: int = 30,
+) -> FleetResult:
+    """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
+
+    ``topo`` must be a star: every non-home tier one link from home (the
+    hub models any one client's vantage point; the edge tiers and their
+    service slots are shared across all of them).  Client ``c`` draws
+    its request latencies from ``default_rng(seed + c)``, so client 0 of
+    a ``seed``-seeded fleet consumes randomness exactly like
+    ``analytic_run(..., seed=seed)``.
+
+    A client running a fully-local plan sends nothing over the wire, so
+    it cannot *observe* its link recover; every ``probe_every``
+    processed frames such a client pings its edge link (compares current
+    conditions against the fingerprint its plan was priced under) and
+    re-plans on any change — otherwise a drift-then-recover sequence
+    would strand it on the slow local plan forever.
+    """
+    if num_clients < 1:
+        raise ValueError("need at least one client")
+    if granularity == "single_step":
+        comp_used = comp.fused()
+    elif granularity == "multi_step":
+        comp_used = comp
+    else:
+        raise ValueError(granularity)
+
+    edges = [n for n in topo.tier_names() if n != topo.home]
+    if not edges:
+        raise ValueError("fleet topology has no edge tiers")
+    for e in edges:
+        if len(topo.path_tiers(topo.home, e)) != 2:
+            raise ValueError(
+                f"fleet topology must be a star; tier {e!r} is not "
+                "directly linked to home"
+            )
+
+    cache = cache if cache is not None else PlanCache()
+    link_table = LinkTable(topo)
+    servers = {e: SlotServer(e, topo.tier(e).capacity) for e in edges}
+    detector = DriftDetector(
+        threshold=drift_threshold,
+        window=drift_window,
+        min_samples=drift_min_samples,
+    )
+    q = EventQueue()
+    period = 1.0 / camera_fps
+
+    ctx = DispatchContext(
+        topo=topo,
+        comp=comp_used,
+        policy=policy,
+        edges=edges,
+        servers=servers,
+        link_table=link_table,
+        assignments={},
+    )
+    disp = make_dispatch(dispatch)
+    clients: List[_Client] = []
+    for c in range(num_clients):
+        edge = disp.assign(c, ctx)
+        ctx.assignments[edge] = ctx.assignments.get(edge, 0) + 1
+        sub = edge_subtopology(topo, edge, link_table)
+        plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
+        clients.append(
+            _Client(
+                c,
+                np.random.default_rng(seed + c),
+                edge,
+                plan,
+                topo.home,
+                topology_fingerprint(sub),
+            )
+        )
+
+    # --- event handlers ---------------------------------------------------
+
+    def start_frame(client: _Client) -> None:
+        i = client.next_i
+        if i >= num_frames:
+            return
+        if client.drifted:
+            client.drifted = False
+            sub = edge_subtopology(topo, client.edge, link_table)
+            plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
+            client.set_plan(plan, topology_fingerprint(sub))
+            client.replans += 1
+            client.frames_since_probe = 0
+            detector.reset(client.idx)
+        arrival = i * period
+        start = max(arrival, client.t_free)
+        newest = min(int(start / period), num_frames - 1)
+        if newest > i:
+            i = newest
+            arrival = i * period
+            start = max(arrival, client.t_free)
+        sampled, observed = link_table.sample_plan_latency(client.plan, client.rng)
+        client.pending = (i, arrival, start, sampled, observed)
+        if client.visits:
+            q.schedule(
+                start + (sampled - client.service_total),
+                lambda c=client: visit(c, 0, 0.0),
+            )
+        else:
+            q.schedule(start + sampled, lambda c=client: finish(c, 0.0))
+
+    def visit(client: _Client, vidx: int, wait_acc: float) -> None:
+        tier, service = client.visits[vidx]
+        svc_start, svc_end = servers[tier].admit(q.now, service)
+        wait_acc += svc_start - q.now
+        if vidx + 1 < len(client.visits):
+            q.schedule(svc_end, lambda c=client: visit(c, vidx + 1, wait_acc))
+        else:
+            q.schedule(svc_end, lambda c=client: finish(c, wait_acc))
+
+    def finish(client: _Client, wait: float) -> None:
+        i, arrival, start, sampled, observed = client.pending
+        client.pending = None
+        # canonical finish: waits appended after the resampled plan total,
+        # so a zero-wait run is bit-identical to the analytic FrameLoop
+        fin = (start + sampled) + wait
+        client.events.append(
+            FrameEvent(i, arrival, start, fin, i - client.last_processed)
+        )
+        client.last_processed = i
+        client.next_i = i + 1
+        client.t_free = fin
+        client.total_wait += wait
+        if observed:
+            if detector.observe(client.idx, client.plan, observed):
+                client.drifted = True
+        else:
+            # leg-less (fully local) plan: nothing crosses the wire, so
+            # probe the link periodically to notice recovery/changes
+            client.frames_since_probe += 1
+            if client.frames_since_probe >= probe_every:
+                client.frames_since_probe = 0
+                sub = edge_subtopology(topo, client.edge, link_table)
+                if topology_fingerprint(sub) != client.plan_fp:
+                    client.drifted = True
+        start_frame(client)
+
+    for client in clients:
+        q.schedule(0.0, lambda c=client: start_frame(c))
+    for d in drifts:
+        q.schedule(
+            d.time,
+            lambda d=d: link_table.set(
+                d.link, latency=d.latency, jitter=d.jitter, bandwidth=d.bandwidth
+            ),
+        )
+    q.run()
+
+    client_results = []
+    for client in clients:
+        duration = client.events[-1].finish if client.events else 0.0
+        client_results.append(
+            ClientResult(
+                client=client.idx,
+                edge=client.edge,
+                stats=LoopStats(client.events, num_frames, duration),
+                plan=client.plan,
+                replans=client.replans,
+                total_wait=client.total_wait,
+            )
+        )
+    edge_loads = [
+        EdgeLoad(
+            name=e,
+            capacity=servers[e].capacity,
+            clients=ctx.assignments.get(e, 0),
+            admitted=servers[e].admitted,
+            busy_time=servers[e].busy_time,
+            mean_wait=servers[e].mean_wait,
+        )
+        for e in edges
+    ]
+    return FleetResult(
+        clients=client_results,
+        edges=edge_loads,
+        cache=cache,
+        num_frames=num_frames,
+        duration=max((c.stats.duration for c in client_results), default=0.0),
+    )
+
+
+@dataclasses.dataclass
+class SweepPoint:
+    num_clients: int
+    result: FleetResult
+
+    @property
+    def fps(self) -> float:
+        return self.result.mean_achieved_fps
+
+    @property
+    def drop_rate(self) -> float:
+        return self.result.drop_rate
+
+    @property
+    def p99(self) -> float:
+        return self.result.p99_loop_time
+
+
+def capacity_sweep(
+    topo: Topology,
+    comp: StagedComputation,
+    client_counts: Sequence[int] = (1, 2, 4, 8, 16, 32),
+    **kwargs,
+) -> List[SweepPoint]:
+    """The Fig. 3 accounting at fleet scale: clients vs achieved fps,
+    drop rate and tail latency.  Each point is an independent seeded
+    run, so adding clients never perturbs the smaller runs."""
+    return [
+        SweepPoint(n, run_fleet(topo, comp, num_clients=n, **kwargs))
+        for n in client_counts
+    ]

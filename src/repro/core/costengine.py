@@ -101,6 +101,10 @@ class PlanReport:
     uplink_bytes: int
     downlink_bytes: int
     legs: Tuple[LatencyLeg, ...] = ()
+    # per-tier compute breakdown in first-visit order — the fleet
+    # simulator (repro.cluster) charges the remote entries against a
+    # contended server's service slots instead of a dedicated machine
+    compute_by_tier: Tuple[Tuple[str, float], ...] = ()
 
     @property
     def fps(self) -> float:
@@ -123,10 +127,25 @@ class PlanReport:
 
 
 class CostEngine:
-    """Prices placements of a ``StagedComputation`` over a ``Topology``."""
+    """Prices placements of a ``StagedComputation`` over a ``Topology``.
 
-    def __init__(self, topology: Topology):
+    ``occupancy`` maps tier names to the number of *other* requests
+    currently in flight at that tier.  A tier with ``capacity`` slots
+    shared by q+1 concurrent requests serves each at rate
+    ``capacity / (q+1)`` once oversubscribed (processor sharing — the
+    virtualized-accelerator model), so the engine inflates that tier's
+    service time by ``max(1, (q+1) / capacity)``.  With no occupancy
+    recorded (the default) every tier prices as a dedicated machine and
+    the arithmetic is bit-for-bit the uncontended model.
+    """
+
+    def __init__(
+        self,
+        topology: Topology,
+        occupancy: Optional[Dict[str, int]] = None,
+    ):
         self.topology = topology
+        self.occupancy: Dict[str, int] = dict(occupancy) if occupancy else {}
 
     # -- small shared pieces ------------------------------------------------
 
@@ -146,12 +165,21 @@ class CostEngine:
             f"item {item.name!r} originates at unknown tier {item.origin!r}"
         )
 
+    def contention_factor(self, tier_name: str) -> float:
+        """Service-time inflation under the recorded occupancy."""
+        occ = self.occupancy.get(tier_name, 0)
+        if occ <= 0:
+            return 1.0
+        cap = max(self.topology.tier(tier_name).capacity, 1)
+        return max(1.0, (occ + 1) / cap)
+
     def compute_time(self, stage: Stage, tier_name: str) -> float:
         tier = self.topology.tier(tier_name)
         par = stage.flops * stage.parallel_fraction
         ser = stage.flops - par
         accel = tier.accel_flops if tier.has_accelerator else tier.scalar_flops
-        return par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+        base = par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+        return base * self.contention_factor(tier_name)
 
     def _piggybacks(self, src: str, dst: str) -> bool:
         """A payload rides the pending RPC request when its source lies on
@@ -229,6 +257,7 @@ class CostEngine:
         up_bytes = 0
         down_bytes = 0
         legs: List[LatencyLeg] = []
+        compute_by_tier: Dict[str, float] = {}  # insertion = first-visit order
 
         def _ship(nbytes: int, src: str, dst: str, piggyback: Optional[bool]) -> None:
             """Payload cost: fetch legs + serialize/deserialize + wire."""
@@ -287,7 +316,9 @@ class CostEngine:
                     # across JNI once (fast path: pinned arrays).
                     wrapper_t += table[name].nbytes / topo.wrapper.jni_bandwidth
             # --- compute ---
-            compute_t += self.compute_time(stage, dst)
+            ct = self.compute_time(stage, dst)
+            compute_t += ct
+            compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + ct
             for o in stage.outputs:
                 residency[o.name] = {dst}
 
@@ -312,4 +343,5 @@ class CostEngine:
             uplink_bytes=up_bytes,
             downlink_bytes=down_bytes,
             legs=tuple(legs),
+            compute_by_tier=tuple(compute_by_tier.items()),
         )

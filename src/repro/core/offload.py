@@ -102,6 +102,7 @@ def plan(
     policy: Policy,
     max_exhaustive: int = 20,
     planner: Optional[str] = None,
+    occupancy: Optional[Dict[str, int]] = None,
 ) -> PlanReport:
     """Choose placements under a policy and return the cost report.
 
@@ -110,10 +111,12 @@ def plan(
     switch to the equally-exact O(n*k^2) DP once the lattice outgrows a
     few hundred plans — see ``planners.auto_planner``.  Pass
     ``planner`` ("exhaustive" | "single_crossing" | "chain_dp") to force
-    a specific AUTO strategy.
+    a specific AUTO strategy.  ``occupancy`` (tier name -> concurrent
+    requests already there) makes the engine charge queueing inflation
+    on contended tiers — how a fleet dispatcher prices a loaded edge.
     """
     topo = as_topology(env)
-    engine = CostEngine(topo)
+    engine = CostEngine(topo, occupancy=occupancy)
     n = len(comp.stages)
     if policy is Policy.LOCAL:
         return engine.evaluate(comp, (topo.home,) * n)

@@ -32,13 +32,22 @@ def sample_latency(latency: float, jitter: float, rng=None) -> float:
 
 @dataclasses.dataclass(frozen=True)
 class Tier:
-    """A compute tier (the paper's "server" / "laptop", or a TPU pod)."""
+    """A compute tier (the paper's "server" / "laptop", or a TPU pod).
+
+    ``capacity`` is the number of requests the tier can serve concurrently
+    at full speed (virtualized-accelerator slots, AVEC-style).  The paper's
+    dedicated server is capacity 1 with a single client, so nothing queues;
+    a shared edge box saturates once more than ``capacity`` clients hit it
+    simultaneously, and the cost engine / fleet simulator charge queueing
+    delay beyond that point.
+    """
 
     name: str
     accel_flops: float  # effective accelerator FLOP/s for this workload
     scalar_flops: float  # serial/CPU FLOP/s (the non-parallel fraction)
     dispatch_overhead: float = 50e-6  # per-stage launch cost, seconds
     has_accelerator: bool = True
+    capacity: int = 1  # concurrent service slots
 
 
 @dataclasses.dataclass(frozen=True)

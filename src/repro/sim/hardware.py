@@ -13,6 +13,7 @@ anchors are the only fitted quantities; see DESIGN.md §6.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict
 
 from repro.core import pso, tracker
@@ -146,6 +147,43 @@ EDGE_GPU = Tier(
     scalar_flops=50e9,
     dispatch_overhead=30e-6,
 )
+
+
+def fleet_star(
+    num_edges: int = 2,
+    edge_capacity: int = 4,
+    client_tier: Tier = THIN_CLIENT_NO_GPU,
+    base_link: Link = links.FIVE_G_EDGE,
+) -> Topology:
+    """The fleet-simulation shape: one thin-client vantage point star-
+    connected to ``num_edges`` shared metro-edge GPU boxes.
+
+    Each edge tier carries ``edge_capacity`` concurrent service slots
+    (virtualized-accelerator sharing, AVEC-style); each spoke gets its
+    own named link so drift can be injected per edge, with latency
+    staggered a little per spoke so latency-weighted dispatch has a real
+    gradient to exploit."""
+    spokes = []
+    for i in range(num_edges):
+        tier = dataclasses.replace(
+            EDGE_GPU, name=f"{EDGE_GPU.name}_{i}", capacity=edge_capacity
+        )
+        link = Link(
+            name=f"{base_link.name}_{i}",
+            bandwidth=base_link.bandwidth,
+            latency=base_link.latency * (1.0 + 0.15 * i),
+            jitter=base_link.jitter,
+        )
+        spokes.append((f"edge_{i}", tier, link))
+    return Topology.star(
+        ("client", client_tier),
+        spokes,
+        wrapper=WrapperModel(
+            call_overhead=0.2e-3,
+            serialization_bandwidth=2e9,
+            jni_bandwidth=8e9,
+        ),
+    )
 
 
 def three_tier_environment(device: Tier = THIN_CLIENT_NO_GPU) -> Topology:

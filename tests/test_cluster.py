@@ -1,0 +1,413 @@
+"""Fleet simulator: golden single-client limit, exact queueing, dispatch,
+plan-cache correctness, drift-scoped re-planning, determinism.
+
+The acceptance contracts:
+* 1 client + capacity-1 edge == ``sim.runtime.analytic_run`` bit-for-bit
+  (same plan, same per-frame events, same duration — not approx);
+* drop rate is monotonically non-decreasing in fleet size under
+  contention;
+* a plan-cache hit returns a bit-identical ``PlanReport``;
+* injected link drift triggers re-planning for exactly the affected
+  clients;
+* a fixed seed reproduces the fleet run exactly.
+"""
+
+import pytest
+
+from repro.cluster import (
+    LinkDrift,
+    PlanCache,
+    capacity_sweep,
+    edge_subtopology,
+    run_fleet,
+)
+from repro.cluster.events import EventQueue, SlotServer
+from repro.cluster.plancache import comp_signature, topology_fingerprint
+from repro.core.costengine import CostEngine
+from repro.core.offload import (
+    Environment,
+    Link,
+    Policy,
+    Tier,
+    Topology,
+    WrapperModel,
+)
+from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
+from repro.sim import hardware, runtime
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+
+def _comp(n_stages=4, frame_bytes=500_000, flops=5e9):
+    sources = (
+        DataItem("frame", frame_bytes, CLIENT),
+        DataItem("h_prev", 108, CLIENT),
+    )
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 20_000)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=flops / n_stages,
+                inputs=(prev, "h_prev") if i == 0 else (prev,),
+                outputs=(out,),
+                parallel_fraction=0.95,
+            )
+        )
+        prev = out.name
+    return StagedComputation("test", sources, tuple(stages), (prev,))
+
+
+def _star(num_edges=2, capacity=1, latency=2e-3, jitter=0.0, accel=0.5e12):
+    """A jitter-free (by default) star: weak hub, `num_edges` edge boxes."""
+    hub = Tier("hub", 20e9, 20e9, has_accelerator=False)
+    spokes = [
+        (
+            f"edge_{i}",
+            Tier(f"edge_{i}", accel, 40e9, capacity=capacity),
+            Link(f"link_{i}", 117e6, latency * (1 + 0.1 * i), jitter),
+        )
+        for i in range(num_edges)
+    ]
+    return Topology.star(("hub", hub), spokes, wrapper=WrapperModel())
+
+
+# ---------------------------------------------------------------------------
+# golden: the single-client limit reproduces the analytic simulator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("net", ["gigabit_ethernet", "wifi_802.11"])
+@pytest.mark.parametrize("granularity", ["single_step", "multi_step"])
+def test_single_client_matches_analytic_run_bit_for_bit(net, granularity):
+    """1 client vs a capacity-1 edge that is exactly the paper's server:
+    identical PlanReport, identical frame events, identical duration.
+    The Wi-Fi case exercises jittered legs, so rng consumption must
+    match draw-for-draw too."""
+    from repro.core.wrapper import paper_wrapper
+    from repro.net import links
+
+    comp = hardware.paper_staged()
+    tiers = hardware.paper_tiers()
+    link = links.ALL_LINKS[net]
+    env = Environment(
+        client=tiers["laptop"],
+        server=tiers["server"],
+        link=link,
+        wrapper=paper_wrapper(),
+    )
+    star = Topology.star(
+        ("client", tiers["laptop"]),
+        [("server", tiers["server"], link)],
+        wrapper=paper_wrapper(),
+    )
+    for seed in (0, 7):
+        ref = runtime.analytic_run(
+            comp, env, Policy.AUTO, granularity, num_frames=300, seed=seed
+        )
+        (point,) = capacity_sweep(
+            star,
+            comp,
+            client_counts=(1,),
+            num_frames=300,
+            policy=Policy.AUTO,
+            granularity=granularity,
+            seed=seed,
+        )
+        res = point.result
+        c = res.clients[0]
+        assert c.plan == ref.plan  # dataclass equality: every field exact
+        assert c.stats.processed == ref.stats.processed
+        assert c.stats.duration == ref.stats.duration
+        assert c.stats.dropped == ref.stats.dropped
+        assert c.total_wait == 0.0
+
+
+def test_single_client_two_tier_plan_matches_plan_report():
+    """The fleet's cached plan for a 1-edge star equals the two-tier
+    PlanReport totals from the offload engine directly."""
+    from repro.core import offload
+
+    comp = _comp()
+    star = _star(num_edges=1)
+    sub = edge_subtopology(star, "edge_0")
+    direct = offload.plan(comp.fused(), sub, Policy.AUTO)
+    res = run_fleet(star, comp, num_clients=1, num_frames=30)
+    assert res.clients[0].plan == direct
+
+
+# ---------------------------------------------------------------------------
+# contention: exact FIFO queueing, monotone degradation
+# ---------------------------------------------------------------------------
+
+
+def test_slot_server_fifo_exactness():
+    srv = SlotServer("e", capacity=2)
+    # three simultaneous arrivals, two slots: third waits for the first
+    assert srv.admit(0.0, 1.0) == (0.0, 1.0)
+    assert srv.admit(0.0, 1.0) == (0.0, 1.0)
+    assert srv.admit(0.0, 0.5) == (1.0, 1.5)
+    assert srv.load(0.5) == 3
+    assert srv.load(1.2) == 1
+    assert srv.total_wait == pytest.approx(1.0)
+    srv.admit(2.0, 1.0)
+    with pytest.raises(ValueError):
+        srv.admit(1.5, 1.0)  # admissions must be time-ordered
+
+
+def test_event_queue_orders_ties_by_schedule_order():
+    q = EventQueue()
+    out = []
+    q.schedule(1.0, lambda: out.append("a"))
+    q.schedule(0.5, lambda: out.append("b"))
+    q.schedule(1.0, lambda: out.append("c"))
+    q.run()
+    assert out == ["b", "a", "c"]
+
+
+def test_capacity_sweep_drop_rate_monotone():
+    """More clients on a saturated capacity-1 edge can only drop more
+    frames (deterministic: jitter-free links)."""
+    comp = _comp(flops=40e9)  # ~80 ms of edge service per frame
+    topo = _star(num_edges=1, capacity=1)
+    pts = capacity_sweep(
+        topo, comp, (1, 2, 4, 8), num_frames=120, policy=Policy.FORCED
+    )
+    drops = [p.drop_rate for p in pts]
+    assert drops == sorted(drops)
+    assert drops[-1] > drops[0]  # contention actually bites
+    # queue waits appear as soon as clients share the slot
+    assert pts[0].result.clients[0].total_wait == 0.0
+    assert pts[-1].result.clients[-1].total_wait > 0.0
+    # p99 tail degrades with the queue too
+    assert pts[-1].p99 >= pts[0].p99
+
+
+def test_capacity_relieves_contention():
+    """Same fleet, wider edge: drops cannot get worse."""
+    comp = _comp(flops=40e9)
+    slim = run_fleet(
+        _star(num_edges=1, capacity=1), comp, 8, num_frames=120,
+        policy=Policy.FORCED,
+    )
+    wide = run_fleet(
+        _star(num_edges=1, capacity=8), comp, 8, num_frames=120,
+        policy=Policy.FORCED,
+    )
+    assert wide.drop_rate <= slim.drop_rate
+    assert wide.p99_loop_time <= slim.p99_loop_time
+
+
+def test_occupancy_aware_cost_engine():
+    """Queueing inflation: (q+1)/capacity beyond capacity, identity
+    otherwise, and the default engine stays bit-for-bit uncontended."""
+    topo = _star(num_edges=1, capacity=2)
+    comp = _comp().fused()
+    base = CostEngine(topo)
+    stage = comp.stages[0]
+    t0 = base.compute_time(stage, "edge_0")
+    # one other request on a 2-slot tier: still full speed
+    assert CostEngine(topo, {"edge_0": 1}).compute_time(stage, "edge_0") == t0
+    # three others on 2 slots: 2x inflation
+    assert CostEngine(topo, {"edge_0": 3}).compute_time(
+        stage, "edge_0"
+    ) == pytest.approx(2.0 * t0)
+    # occupancy on another tier does not leak
+    assert CostEngine(topo, {"hub": 9}).compute_time(stage, "edge_0") == t0
+    rep0 = base.evaluate(comp, ("edge_0",))
+    rep1 = CostEngine(topo, {"edge_0": 3}).evaluate(comp, ("edge_0",))
+    assert rep1.compute_time == pytest.approx(2.0 * rep0.compute_time)
+    assert rep1.network_time == rep0.network_time  # wire unaffected
+
+
+def test_plan_report_compute_by_tier_breakdown():
+    comp = _comp()
+    topo = _star(num_edges=1)
+    rep = CostEngine(topo).evaluate(comp, ("hub", "edge_0", "edge_0", "hub"))
+    by_tier = dict(rep.compute_by_tier)
+    assert set(by_tier) == {"hub", "edge_0"}
+    assert sum(by_tier.values()) == pytest.approx(rep.compute_time, rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_dispatch_policies_spread_and_prefer_cheap_spokes():
+    comp = _comp()
+    topo = _star(num_edges=3)
+    rr = run_fleet(topo, comp, 6, num_frames=10, dispatch="round_robin")
+    assert [e.clients for e in rr.edges] == [2, 2, 2]
+    lq = run_fleet(topo, comp, 6, num_frames=10, dispatch="least_queue")
+    assert [e.clients for e in lq.edges] == [2, 2, 2]
+    # latency-weighted sends the first client to the lowest-latency spoke
+    lw = run_fleet(topo, comp, 1, num_frames=10, dispatch="latency_weighted")
+    assert lw.clients[0].edge == "edge_0"
+    with pytest.raises(ValueError):
+        run_fleet(topo, comp, 1, num_frames=10, dispatch="nope")
+
+
+def test_fleet_rejects_non_star_topologies():
+    chain = hardware.three_tier_environment()
+    with pytest.raises(ValueError):
+        run_fleet(chain, _comp(), 2, num_frames=10)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hit_is_bit_identical():
+    comp = _comp().fused()
+    topo = edge_subtopology(_star(), "edge_0")
+    cache = PlanCache()
+    first, hit0 = cache.get_or_plan(comp, topo, Policy.AUTO)
+    again, hit1 = cache.get_or_plan(comp, topo, Policy.AUTO)
+    assert (hit0, hit1) == (False, True)
+    assert again is first  # the stored object itself: bit-identical
+    # an equal-but-distinct topology object still hits (keyed by content)
+    clone = edge_subtopology(_star(), "edge_0")
+    rep, hit2 = cache.get_or_plan(comp, clone, Policy.AUTO)
+    assert hit2 and rep is first
+    assert cache.stats.hits == 2 and cache.stats.misses == 1
+    assert len(cache) == 1
+
+
+def test_plan_cache_keys_discriminate():
+    comp = _comp().fused()
+    star = _star()
+    t0 = edge_subtopology(star, "edge_0")
+    t1 = edge_subtopology(star, "edge_1")
+    assert topology_fingerprint(t0) != topology_fingerprint(t1)
+    assert comp_signature(comp) != comp_signature(_comp())
+    cache = PlanCache()
+    cache.get_or_plan(comp, t0, Policy.AUTO)
+    _, hit = cache.get_or_plan(comp, t1, Policy.AUTO)
+    assert not hit
+    _, hit = cache.get_or_plan(comp, t0, Policy.FORCED)
+    assert not hit
+    assert len(cache) == 3
+    # invalidation by link name drops exactly the matching entries
+    assert cache.invalidate_link("link_0") == 2
+    assert len(cache) == 1
+
+
+def test_plan_cache_hit_rate_in_steady_state_32_client_sweep():
+    """>= 90% of plan lookups in a 32-client fleet are cache hits — N
+    identical clients cost O(num_edges) plans."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    res = run_fleet(topo, comp, num_clients=32, num_frames=60)
+    stats = res.cache.stats
+    assert stats.lookups >= 32
+    assert stats.misses == 2  # one plan per edge
+    assert stats.hit_rate >= 0.90
+
+
+# ---------------------------------------------------------------------------
+# drift: incremental re-planning scoped to affected clients
+# ---------------------------------------------------------------------------
+
+
+def test_drift_triggers_replanning_only_for_affected_clients():
+    comp = _comp()
+    topo = _star(num_edges=2)  # jitter-free: no false positives
+    drift = LinkDrift(time=1.0, link="link_0", latency=30e-3)
+    res = run_fleet(
+        topo,
+        comp,
+        num_clients=8,
+        num_frames=150,
+        drifts=[drift],
+        drift_min_samples=4,
+    )
+    affected = [c for c in res.clients if c.edge == "edge_0"]
+    untouched = [c for c in res.clients if c.edge == "edge_1"]
+    assert affected and untouched
+    assert all(c.replans == 1 for c in affected)
+    assert all(c.replans == 0 for c in untouched)
+    # the re-planned clients now carry a plan calibrated to the drifted
+    # link; the others keep the original shared plan
+    for c in affected:
+        legs = {leg.link: leg.latency for leg in c.plan.legs}
+        if "link_0" in legs:  # plan may have gone fully local instead
+            assert legs["link_0"] == pytest.approx(30e-3)
+    assert res.cache.stats.misses == 3  # 2 initial + 1 drifted re-plan
+
+
+def test_local_fallback_recovers_when_link_heals():
+    """A drift bad enough that AUTO retreats to a fully-local plan must
+    not strand the client there: leg-less plans probe the link, so when
+    it recovers the client re-plans back onto the edge."""
+    comp = _comp(flops=40e9)  # heavy enough that offloading clearly wins
+    topo = _star(num_edges=2, capacity=8)
+    res = run_fleet(
+        topo,
+        comp,
+        num_clients=4,
+        num_frames=400,
+        drifts=[
+            LinkDrift(time=1.0, link="link_0", latency=0.5),  # catastrophic
+            LinkDrift(time=6.0, link="link_0", latency=2e-3),  # healed
+        ],
+        drift_min_samples=4,
+        probe_every=10,
+    )
+    affected = [c for c in res.clients if c.edge == "edge_0"]
+    untouched = [c for c in res.clients if c.edge == "edge_1"]
+    assert all(c.replans >= 2 for c in affected)  # retreat, then return
+    # final plan offloads again (has latency legs on the healed link)
+    for c in affected:
+        assert c.plan.legs and all(
+            leg.latency == pytest.approx(2e-3) for leg in c.plan.legs
+        )
+    assert all(c.replans == 0 for c in untouched)
+
+
+def test_drift_below_threshold_does_not_replan():
+    comp = _comp()
+    topo = _star(num_edges=2)
+    # +20% latency is inside the 50% default threshold
+    drift = LinkDrift(time=1.0, link="link_0", latency=2.4e-3)
+    res = run_fleet(
+        topo, comp, num_clients=4, num_frames=100, drifts=[drift],
+        drift_min_samples=4,
+    )
+    assert res.total_replans == 0
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_run_is_deterministic_under_fixed_seed():
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    a = run_fleet(topo, comp, 8, num_frames=80, seed=3)
+    b = run_fleet(topo, comp, 8, num_frames=80, seed=3)
+    assert a.clients == b.clients  # events, plans, waits — all exact
+    assert a.edges == b.edges
+    c = run_fleet(topo, comp, 8, num_frames=80, seed=4)
+    assert a.clients != c.clients  # the seed actually matters (jittered)
+
+
+def test_adding_clients_preserves_existing_draws():
+    """Client i's rng stream depends only on (seed, i): growing the
+    fleet never perturbs the smaller clients' latency draws."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=64)
+    # capacity ample => no queueing => loop times must match exactly
+    small = run_fleet(topo, comp, 2, num_frames=40, seed=0)
+    large = run_fleet(topo, comp, 4, num_frames=40, seed=0)
+    for i in range(2):
+        assert (
+            small.clients[i].stats.processed == large.clients[i].stats.processed
+        )

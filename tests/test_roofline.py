@@ -57,13 +57,72 @@ def test_shape_parse():
     assert nbytes == 4 * 128 * 2
 
 
-def test_report_loader():
+@pytest.fixture(scope="session")
+def dryrun_dir(tmp_path_factory):
+    """Synthesize the experiments/dryrun artifact set the report loader
+    consumes: one JSON per (arch x shape x mesh) combo, with the same
+    schema ``repro.launch.dryrun.run_one`` writes.  Compiling the real
+    grid needs 512 fake XLA devices and ~hours; the loader's contract is
+    the record shape, which this fixture pins down instead."""
+    import json
+
+    from repro.configs import registry
+    from repro.configs import shapes as shp
+
+    out = tmp_path_factory.mktemp("dryrun")
+    for arch in registry.list_archs():
+        cfg = registry.get(arch)
+        for shape_name, shape in shp.ALL_SHAPES.items():
+            for mesh in ("pod16x16", "pod2x16x16"):
+                rec = {"arch": arch, "shape": shape_name, "mesh": mesh}
+                if not shp.applicable(cfg, shape):
+                    rec.update(
+                        status="skipped",
+                        reason="long_500k skipped: pure full-attention arch",
+                    )
+                else:
+                    chips = 256 if mesh == "pod16x16" else 512
+                    flops = 2.0 * cfg.active_param_count() * 1024
+                    rec.update(
+                        status="ok",
+                        chips=chips,
+                        lower_s=1.0,
+                        compile_s=30.0,
+                        cost={"flops": flops},
+                        memory={"bytes_per_chip": 8 * 2**30},
+                        roofline={
+                            "compute_s": 2e-3,
+                            "memory_s": 1e-3,
+                            "collective_s": 5e-4,
+                            "dominant": "compute",
+                            "model_flops": flops,
+                            "useful_ratio": 0.5,
+                            "coll_bytes": 1e8,
+                            "coll_by_kind": {"all-reduce": 1e8},
+                        },
+                        hlo_bytes_len=1000,
+                    )
+                path = out / f"{arch}__{shape_name}__{mesh}.json"
+                path.write_text(json.dumps(rec, indent=1))
+    return str(out)
+
+
+def test_report_loader(dryrun_dir):
     from repro.roofline import report
 
-    recs = report.load_records("experiments/dryrun")
+    recs = report.load_records(dryrun_dir)
     s = report.summary(recs)
     assert s["error"] == 0
     assert s["ok"] >= 60  # 35 combos x 2 meshes, minus nothing
     table = report.roofline_table(recs)
     assert table.startswith("| arch | shape |")
     assert "mixtral-8x7b" in table
+
+
+def test_report_dryrun_table(dryrun_dir):
+    from repro.roofline import report
+
+    recs = report.load_records(dryrun_dir)
+    table = report.dryrun_table(recs)
+    assert "| ok |" in table and "| skipped |" in table
+    assert "all-reduce" in table

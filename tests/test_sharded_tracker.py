@@ -1,6 +1,7 @@
 """The paper's GPGPU axis mapped onto the TPU mesh: particle-parallel
 PSO evaluation via shard_map, and the sharded tracker lowering."""
 
+import os
 import subprocess
 import sys
 
@@ -8,6 +9,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# The subprocess compiles the full sharded tracker step on 8 fake CPU
+# devices, which can take minutes on a loaded CI container.  The
+# workload below is the smallest that still exercises every contract
+# (sharded eval parity, collective lowering, execution); the timeout is
+# env-tunable for slow runners.
+SUBPROC_TIMEOUT = int(os.environ.get("REPRO_SUBPROC_TIMEOUT", "600"))
 
 SCRIPT = r"""
 import os
@@ -18,7 +26,7 @@ from repro.core import handmodel, objective, pso, tracker
 from repro.core.camera import Camera
 
 mesh = jax.make_mesh((2, 4), ("data", "model"), devices=jax.devices())
-cam = Camera(width=32, height=32, fx=30.0, fy=30.0, cx=15.5, cy=15.5)
+cam = Camera(width=24, height=24, fx=22.0, fy=22.0, cx=11.5, cy=11.5)
 h0 = handmodel.default_pose(0.45)
 depth = objective.render_depth(h0, cam)
 
@@ -29,7 +37,7 @@ def eval_local(hs):
 key = jax.random.PRNGKey(0)
 lo = handmodel.parameter_lower_bounds(h0)
 hi = handmodel.parameter_upper_bounds(h0)
-hs = lo + jax.random.uniform(key, (16, 27)) * (hi - lo)
+hs = lo + jax.random.uniform(key, (8, 27)) * (hi - lo)
 with mesh:
     sharded = pso.sharded_eval(eval_local, mesh, "model")
     a = jax.jit(sharded)(hs)
@@ -39,7 +47,7 @@ print("SHARDED_EVAL_OK")
 
 # 2) the full sharded tracker step lowers + compiles on the mesh
 cfg = tracker.TrackerConfig(
-    camera=cam, pso=pso.PSOConfig(num_particles=16, num_generations=3)
+    camera=cam, pso=pso.PSOConfig(num_particles=8, num_generations=2)
 )
 with mesh:
     step = tracker.make_track_frame_sharded(cfg, mesh, "model")
@@ -59,9 +67,9 @@ def test_sharded_tracker_on_8_fake_devices():
     """Runs in a subprocess: needs its own XLA device-count flag."""
     proc = subprocess.run(
         [sys.executable, "-c", SCRIPT],
-        capture_output=True, text=True, timeout=420,
+        capture_output=True, text=True, timeout=SUBPROC_TIMEOUT,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin"},
-        cwd="/root/repo",
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "SHARDED_EVAL_OK" in proc.stdout
