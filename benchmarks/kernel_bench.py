@@ -65,4 +65,18 @@ def bench() -> list:
         t_upd * 1e6,
         f"particle_dims_per_s={np_ * d / t_upd:.2e};interpret=True",
     ))
+
+    # edge batching: B clients' swarms in ONE fused launch vs B launches
+    b = 4
+    tile = lambda a: jnp.broadcast_to(a, (b,) + a.shape)
+    t_fused = time_fn(
+        jax.jit(lambda *a: kmod.pso_update_batched(*a, **consts)),
+        tile(x), tile(v), tile(pb), tile(gb), tile(r1), tile(r2), lo, hi,
+    )
+    rows.append((
+        f"kernel/pso_update_batched_b{b}_pallas_interpret",
+        t_fused * 1e6,
+        f"particle_dims_per_s={b * np_ * d / t_fused:.2e};"
+        f"per_client_vs_solo={t_fused / (b * t_upd):.2f};interpret=True",
+    ))
     return rows

@@ -13,7 +13,12 @@ from repro.cluster.dispatch import (  # noqa: F401
     edge_subtopology,
     make_dispatch,
 )
-from repro.cluster.events import EventQueue, LinkTable, SlotServer  # noqa: F401
+from repro.cluster.events import (  # noqa: F401
+    BatchingSlotServer,
+    EventQueue,
+    LinkTable,
+    SlotServer,
+)
 from repro.cluster.fleet import (  # noqa: F401
     ClientResult,
     FleetResult,

@@ -15,9 +15,15 @@ home tier + one edge server; dispatch decides which edge that is.
   (multi-edge migration — a ROADMAP follow-up).
 * ``latency_weighted`` — price a plan against every edge with the
   occupancy-aware cost engine (queueing inflation from current
-  assignments) and take the argmin predicted step latency.  This is the
-  paper's RAPID "should I offload?" decision extended to "offload
-  *where*?".
+  assignments; on a ``batching`` tier that inflation is the sublinear
+  ``BatchServiceModel`` amortization instead of processor sharing) and
+  take the argmin predicted step latency.  This is the paper's RAPID
+  "should I offload?" decision extended to "offload *where*?".
+* ``batch_affinity``   — prefer the edge currently *gathering* the
+  largest open batch (joining a forming batch amortizes its launch and
+  adds no extra queueing), then fall back to join-the-shortest-queue.
+  On non-batching edges every open batch is size 0 and this reduces to
+  ``least_queue`` exactly.
 
 All ties break on edge name, so every policy is deterministic.
 """
@@ -25,9 +31,9 @@ All ties break on edge name, so every policy is deterministic.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
-from repro.cluster.events import LinkTable, SlotServer
+from repro.cluster.events import BatchingSlotServer, LinkTable, SlotServer
 from repro.core import offload
 from repro.core.offload import Policy, Topology
 from repro.core.stages import StagedComputation
@@ -65,7 +71,7 @@ class DispatchContext:
     comp: StagedComputation
     policy: Policy
     edges: List[str]
-    servers: Dict[str, SlotServer]
+    servers: Dict[str, Union[SlotServer, BatchingSlotServer]]
     link_table: LinkTable
     assignments: Dict[str, int]  # edge -> clients currently assigned
     now: float = 0.0
@@ -113,9 +119,28 @@ class LatencyWeightedDispatch:
         return min(ctx.edges, key=lambda e: (predicted(e), e))
 
 
+class BatchAffinityDispatch:
+    name = "batch_affinity"
+
+    def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        return min(
+            ctx.edges,
+            key=lambda e: (
+                -ctx.servers[e].open_batch_size(),
+                ctx.servers[e].load(ctx.now) + ctx.assignments.get(e, 0),
+                e,
+            ),
+        )
+
+
 DISPATCH_POLICIES = {
     cls.name: cls
-    for cls in (RoundRobinDispatch, LeastQueueDispatch, LatencyWeightedDispatch)
+    for cls in (
+        RoundRobinDispatch,
+        LeastQueueDispatch,
+        LatencyWeightedDispatch,
+        BatchAffinityDispatch,
+    )
 }
 
 

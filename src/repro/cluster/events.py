@@ -14,6 +14,14 @@ Three primitives make that exact and deterministic:
   Because the event queue pops in time order, offering admissions at
   their arrival events yields exact FIFO-c queueing, not an averaged
   queueing formula.
+* :class:`BatchingSlotServer` — the fused-launch variant: compatible
+  requests arriving within a ``gather_window`` accumulate into one
+  batch, which then occupies a single slot for the
+  :class:`~repro.core.costengine.BatchServiceModel` batch time (fixed
+  launch overhead + sublinear per-item cost) and completes as a whole.
+  A non-positive gather window degenerates to per-request batches of
+  one served synchronously — exactly :class:`SlotServer`, event for
+  event (the golden equivalence test in tests/test_batching.py).
 * :class:`LinkTable` — the mutable ground-truth network conditions.
   Requests resample every :class:`~repro.core.costengine.LatencyLeg`
   the cost engine recorded for their plan against the *current* table,
@@ -33,7 +41,7 @@ import dataclasses
 import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.costengine import PlanReport
+from repro.core.costengine import BatchServiceModel, PlanReport
 from repro.core.topology import Link, Topology, sample_latency
 
 
@@ -113,6 +121,141 @@ class SlotServer:
     @property
     def mean_wait(self) -> float:
         return self.total_wait / self.admitted if self.admitted else 0.0
+
+    # --- uniform service API (shared with BatchingSlotServer) -----------
+
+    def submit(
+        self,
+        arrival: float,
+        service: float,
+        done: Callable[[float, float], None],
+        key=None,
+    ) -> None:
+        """Admit one request and invoke ``done(start, finish)``.
+
+        Unbatched servers serve immediately, so the callback fires
+        synchronously — callers schedule their continuation events from
+        inside it, which keeps the event ordering identical to the
+        historical ``admit``-then-schedule pattern.
+        """
+        del key  # no batching: compatibility is irrelevant
+        start, finish = self.admit(arrival, service)
+        done(start, finish)
+
+    def open_batch_size(self, key=None) -> int:
+        return 0
+
+
+class BatchingSlotServer:
+    """A slot server that fuses compatible requests into batch launches.
+
+    Requests arriving within ``gather_window`` of the first request of
+    an open batch (per compatibility ``key``) accumulate; when the
+    window closes the whole batch occupies ONE service slot for
+    ``model.batch_time`` of its members' solo service times, and every
+    member finishes at the batch finish — the event-level realization of
+    the cost engine's batch-aware pricing.  Everything is scheduled on
+    the shared :class:`EventQueue`, so runs remain pure functions of
+    their inputs: batch closes fire in time order, members are served in
+    arrival order, and no wall-clock exists anywhere.
+
+    A non-positive ``gather_window`` serves each request synchronously
+    as a batch of one — with ``batch_time([t]) == t`` by construction,
+    that is bit-for-bit the FIFO :class:`SlotServer`.
+    """
+
+    def __init__(
+        self,
+        name: str,
+        capacity: int,
+        queue: EventQueue,
+        model: Optional[BatchServiceModel] = None,
+        gather_window: float = 0.0,
+    ):
+        self.name = name
+        self.capacity = max(int(capacity), 1)
+        self.model = model if model is not None else BatchServiceModel()
+        self.gather_window = gather_window
+        self._queue = queue
+        self._slots = [0.0] * self.capacity  # slot free times (min-heap)
+        heapq.heapify(self._slots)
+        self._finishes: List[float] = []  # in-flight request finish times
+        # key -> gathering [(arrival, service, done), ...]
+        self._open: Dict[object, List[Tuple[float, float, Callable]]] = {}
+        self.admitted = 0
+        self.batches = 0
+        self.busy_time = 0.0
+        self.total_wait = 0.0
+        self._last_admit = float("-inf")
+
+    def load(self, now: float) -> int:
+        """Requests admitted but not yet finished at ``now`` (both the
+        gathering and the in-service ones)."""
+        while self._finishes and self._finishes[0] <= now:
+            heapq.heappop(self._finishes)
+        gathering = sum(len(items) for items in self._open.values())
+        return len(self._finishes) + gathering
+
+    def open_batch_size(self, key=None) -> int:
+        """Members of the currently gathering batch(es) — what a batch-
+        affinity dispatcher wants to join."""
+        if key is None:
+            return sum(len(items) for items in self._open.values())
+        return len(self._open.get(key, ()))
+
+    def submit(
+        self,
+        arrival: float,
+        service: float,
+        done: Callable[[float, float], None],
+        key=None,
+    ) -> None:
+        """Queue one request; ``done(service_start, service_finish)``
+        fires when its batch is placed (synchronously for a zero
+        window, at batch close otherwise)."""
+        if arrival < self._last_admit:
+            raise ValueError(
+                f"{self.name}: admissions out of order "
+                f"({arrival} < {self._last_admit})"
+            )
+        self._last_admit = arrival
+        self.admitted += 1
+        if self.gather_window <= 0.0:
+            self._serve(arrival, [(arrival, service, done)])
+            return
+        items = self._open.get(key)
+        if items is None:
+            self._open[key] = items = []
+            self._queue.schedule(
+                arrival + self.gather_window, lambda k=key: self._close(k)
+            )
+        items.append((arrival, service, done))
+
+    def _close(self, key) -> None:
+        self._serve(self._queue.now, self._open.pop(key))
+
+    def _serve(
+        self, ready: float, items: List[Tuple[float, float, Callable]]
+    ) -> None:
+        batch_t = self.model.batch_time([svc for _, svc, _ in items])
+        free = heapq.heappop(self._slots)
+        start = max(ready, free)
+        finish = start + batch_t
+        heapq.heappush(self._slots, finish)
+        self.batches += 1
+        self.busy_time += batch_t
+        for arrival, _, done in items:
+            heapq.heappush(self._finishes, finish)
+            self.total_wait += start - arrival
+            done(start, finish)
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.admitted if self.admitted else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return self.admitted / self.batches if self.batches else 0.0
 
 
 # one (link name, drawn latency) pair per plan leg — what a client

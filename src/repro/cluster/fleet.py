@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -43,13 +43,18 @@ from repro.cluster.dispatch import (
     edge_subtopology,
     make_dispatch,
 )
-from repro.cluster.events import EventQueue, LinkTable, SlotServer
+from repro.cluster.events import (
+    BatchingSlotServer,
+    EventQueue,
+    LinkTable,
+    SlotServer,
+)
 from repro.cluster.plancache import (
     DriftDetector,
     PlanCache,
     topology_fingerprint,
 )
-from repro.core.costengine import PlanReport
+from repro.core.costengine import BatchServiceModel, PlanReport
 from repro.core.offload import Policy, Topology
 from repro.core.stages import StagedComputation
 from repro.sim.clock import CAMERA_FPS, FrameEvent, LoopStats
@@ -96,6 +101,9 @@ class EdgeLoad:
     admitted: int
     busy_time: float
     mean_wait: float
+    # fused-launch accounting (0 / 0.0 on non-batching edges)
+    batches: int = 0
+    mean_batch_size: float = 0.0
 
 
 @dataclasses.dataclass
@@ -195,6 +203,8 @@ def run_fleet(
     drift_window: int = 16,
     drift_min_samples: int = 8,
     probe_every: int = 30,
+    batching: Optional[bool] = None,
+    gather_window: float = 2e-3,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -211,6 +221,16 @@ def run_fleet(
     conditions against the fingerprint its plan was priced under) and
     re-plans on any change — otherwise a drift-then-recover sequence
     would strand it on the slow local plan forever.
+
+    Batching: an edge tier declaring ``batching=True`` is served by a
+    :class:`~repro.cluster.events.BatchingSlotServer` — concurrent
+    requests arriving within ``gather_window`` fuse into one launch with
+    sublinear batch service time (``BatchServiceModel.from_tier``) —
+    instead of a FIFO ``SlotServer``.  ``batching`` overrides the tiers'
+    declarations fleet-wide (True forces fused serving on every edge,
+    False forces plain FIFO); ``None`` respects each tier.  The trade:
+    a wider gather window fuses more (cheaper service under load) but
+    adds up to that much pre-service latency per frame.
     """
     if num_clients < 1:
         raise ValueError("need at least one client")
@@ -230,16 +250,47 @@ def run_fleet(
                 f"fleet topology must be a star; tier {e!r} is not "
                 "directly linked to home"
             )
+    if batching is not None and any(
+        topo.tier(e).batching != batching for e in edges
+    ):
+        # the override changes the tiers the cost engine prices, so it
+        # must be baked into the topology (and its cache fingerprints)
+        topo = Topology(
+            tiers={
+                name: (
+                    dataclasses.replace(t, batching=batching)
+                    if name != topo.home
+                    else t
+                )
+                for name, t in topo.tiers.items()
+            },
+            links=dict(topo.links),
+            home=topo.home,
+            wrapper=topo.wrapper,
+            wrapped=topo.wrapped,
+        )
 
     cache = cache if cache is not None else PlanCache()
     link_table = LinkTable(topo)
-    servers = {e: SlotServer(e, topo.tier(e).capacity) for e in edges}
+    q = EventQueue()
+    servers: Dict[str, object] = {}
+    for e in edges:
+        tier = topo.tier(e)
+        if tier.batching:
+            servers[e] = BatchingSlotServer(
+                e,
+                tier.capacity,
+                queue=q,
+                model=BatchServiceModel.from_tier(tier),
+                gather_window=gather_window,
+            )
+        else:
+            servers[e] = SlotServer(e, tier.capacity)
     detector = DriftDetector(
         threshold=drift_threshold,
         window=drift_window,
         min_samples=drift_min_samples,
     )
-    q = EventQueue()
     period = 1.0 / camera_fps
 
     ctx = DispatchContext(
@@ -302,12 +353,27 @@ def run_fleet(
 
     def visit(client: _Client, vidx: int, wait_acc: float) -> None:
         tier, service = client.visits[vidx]
-        svc_start, svc_end = servers[tier].admit(q.now, service)
-        wait_acc += svc_start - q.now
-        if vidx + 1 < len(client.visits):
-            q.schedule(svc_end, lambda c=client: visit(c, vidx + 1, wait_acc))
-        else:
-            q.schedule(svc_end, lambda c=client: finish(c, wait_acc))
+        arrived = q.now
+
+        def placed(
+            svc_start: float,
+            svc_end: float,
+            c=client,
+            vidx=vidx,
+            wait_acc=wait_acc,
+            arrived=arrived,
+        ) -> None:
+            # wait includes any gather-window dwell on batching edges
+            wait = wait_acc + (svc_start - arrived)
+            if vidx + 1 < len(c.visits):
+                q.schedule(svc_end, lambda: visit(c, vidx + 1, wait))
+            else:
+                q.schedule(svc_end, lambda: finish(c, wait))
+
+        # unbatched servers invoke `placed` synchronously (identical to
+        # the historical admit-then-schedule path); batching servers
+        # defer it to their gather-window close event
+        servers[tier].submit(arrived, service, placed, key=comp_used.name)
 
     def finish(client: _Client, wait: float) -> None:
         i, arrival, start, sampled, observed = client.pending
@@ -368,6 +434,8 @@ def run_fleet(
             admitted=servers[e].admitted,
             busy_time=servers[e].busy_time,
             mean_wait=servers[e].mean_wait,
+            batches=getattr(servers[e], "batches", 0),
+            mean_batch_size=getattr(servers[e], "mean_batch_size", 0.0),
         )
         for e in edges
     ]
@@ -406,7 +474,15 @@ def capacity_sweep(
 ) -> List[SweepPoint]:
     """The Fig. 3 accounting at fleet scale: clients vs achieved fps,
     drop rate and tail latency.  Each point is an independent seeded
-    run, so adding clients never perturbs the smaller runs."""
+    run, so adding clients never perturbs the smaller runs.
+
+    One ``PlanCache`` is shared across every point (unless the caller
+    passes their own): the sweep re-runs identical clients against
+    identical link conditions, so point N's plans are point 1's cache
+    hits — N identical clients cost O(num_edges) plans for the *whole*
+    sweep, not per point (asserted in tests/test_cluster.py)."""
+    if kwargs.get("cache") is None:
+        kwargs["cache"] = PlanCache()
     return [
         SweepPoint(n, run_fleet(topo, comp, num_clients=n, **kwargs))
         for n in client_counts

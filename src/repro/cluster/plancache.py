@@ -66,6 +66,9 @@ def topology_fingerprint(topo: Topology) -> Tuple:
             t.dispatch_overhead,
             t.has_accelerator,
             t.capacity,
+            t.batching,
+            t.batch_overhead,
+            t.batch_marginal,
         )
         for pname, t in topo.tiers.items()
     )

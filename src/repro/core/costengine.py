@@ -78,6 +78,110 @@ def envelope_time(
 
 
 # ---------------------------------------------------------------------------
+# batch service model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchServiceModel:
+    """Service time of one *fused* accelerator launch over a batch.
+
+    A tier that batches (``Tier.batching``) serves the concurrent
+    requests it gathered as a single launch instead of time-slicing
+    them.  Each item's solo service time already carries its own launch
+    cost (``Tier.dispatch_overhead`` is inside ``compute_time``); fusing
+    pays that once, plus:
+
+    * ``launch_overhead`` — fixed extra bookkeeping of a multi-item
+      launch (batch gather/scatter, ragged padding), charged only when
+      the batch actually has more than one item, so a batch of one *is*
+      the unbatched launch, bit for bit.
+    * ``marginal_fraction`` — the fraction of its solo time each
+      additional item adds.  Physically: the lone item leaves the
+      accelerator's vector lanes underfilled, so co-scheduled items ride
+      mostly-idle hardware; 1.0 degenerates to serial (no amortization),
+      values < 1 make batch service time sublinear in batch size.
+
+    Invariants (property-tested in tests/test_properties.py):
+      ``batch_time(ts) >= max(ts)`` — a batch finishes no earlier than
+      its largest member run alone;
+      ``batch_time(ts) <= launch_overhead + sum(ts)`` — fusing never
+      costs more than serializing the same launches (marginal <= 1);
+      monotone in batch size.
+    """
+
+    launch_overhead: float = 0.0
+    marginal_fraction: float = 0.35
+
+    def __post_init__(self) -> None:
+        if self.launch_overhead < 0.0:
+            raise ValueError("launch_overhead must be >= 0")
+        if not 0.0 <= self.marginal_fraction <= 1.0:
+            raise ValueError("marginal_fraction must be in [0, 1]")
+
+    def batch_time(self, item_times: Sequence[float]) -> float:
+        """Fused service time for items with the given solo times."""
+        if not item_times:
+            return 0.0
+        m = max(item_times)
+        if len(item_times) == 1:
+            return m
+        rest = sum(item_times) - m
+        return self.launch_overhead + m + self.marginal_fraction * rest
+
+    def per_item_time(self, solo_time: float, batch_size: int) -> float:
+        """Amortized share of a homogeneous batch (capacity planning)."""
+        if batch_size <= 0:
+            return 0.0
+        return self.batch_time([solo_time] * batch_size) / batch_size
+
+    @classmethod
+    def from_tier(cls, tier) -> "BatchServiceModel":
+        """The model a ``Tier`` declares via its flat batching fields."""
+        return cls(
+            launch_overhead=tier.batch_overhead,
+            marginal_fraction=tier.batch_marginal,
+        )
+
+    @classmethod
+    def from_roofline(
+        cls,
+        *,
+        peak_flops: float,
+        effective_flops: float,
+        mem_bandwidth: float,
+        flops_per_item: float,
+        bytes_per_item: int,
+        launch_overhead: float,
+    ) -> "BatchServiceModel":
+        """Calibrate the marginal fraction from roofline terms.
+
+        ``effective_flops`` is the rate ONE client's swarm actually
+        achieves (what a tier's ``accel_flops`` anchors: small
+        populations leave the vector lanes underfilled — the v5e
+        roofline table's single-stream utilization is ~8% of peak);
+        ``peak_flops`` is the device ceiling.  A lone item therefore
+        pays ``launch + flops/effective + bytes/bw`` end to end, while
+        each *co-batched* item streams at the roofline proper —
+        ``max(flops/peak, bytes/bw)`` — filling lanes the lone item
+        leaves idle.  The marginal fraction is that ratio: roughly the
+        lone item's utilization, which is exactly the amortization a
+        fused launch buys back.
+        """
+        solo = (
+            launch_overhead
+            + flops_per_item / effective_flops
+            + bytes_per_item / mem_bandwidth
+        )
+        marginal_t = max(flops_per_item / peak_flops, bytes_per_item / mem_bandwidth)
+        marginal = marginal_t / solo if solo > 0 else 1.0
+        return cls(
+            launch_overhead=launch_overhead,
+            marginal_fraction=min(1.0, marginal),
+        )
+
+
+# ---------------------------------------------------------------------------
 # reports
 # ---------------------------------------------------------------------------
 
@@ -134,9 +238,14 @@ class CostEngine:
     shared by q+1 concurrent requests serves each at rate
     ``capacity / (q+1)`` once oversubscribed (processor sharing — the
     virtualized-accelerator model), so the engine inflates that tier's
-    service time by ``max(1, (q+1) / capacity)``.  With no occupancy
-    recorded (the default) every tier prices as a dedicated machine and
-    the arithmetic is bit-for-bit the uncontended model.
+    service time by ``max(1, (q+1) / capacity)``.  A tier that declares
+    ``batching=True`` replaces processor sharing entirely: the q other
+    requests ride the *same fused launch*, so the predicted service time
+    is ``BatchServiceModel.batch_time`` of q+1 identical items — fixed
+    launch overhead plus sublinear per-item cost — instead of an
+    inflation factor.  With no occupancy recorded (the default) every
+    tier prices as a dedicated machine and the arithmetic is bit-for-bit
+    the uncontended model, batching or not.
     """
 
     def __init__(
@@ -179,6 +288,14 @@ class CostEngine:
         ser = stage.flops - par
         accel = tier.accel_flops if tier.has_accelerator else tier.scalar_flops
         base = par / accel + ser / tier.scalar_flops + tier.dispatch_overhead
+        occ = self.occupancy.get(tier_name, 0)
+        if tier.batching and occ > 0:
+            # the q concurrent requests fuse into this one's launch: the
+            # whole batch finishes together, so this request's service
+            # time is the fused batch time, not a time-sliced share
+            return BatchServiceModel.from_tier(tier).batch_time(
+                [base] * (occ + 1)
+            )
         return base * self.contention_factor(tier_name)
 
     def _piggybacks(self, src: str, dst: str) -> bool:

@@ -37,6 +37,7 @@ import enum
 from typing import Dict, Optional, Sequence, Union
 
 from repro.core.costengine import (  # noqa: F401  (re-exported API)
+    BatchServiceModel,
     CostEngine,
     LatencyLeg,
     PlanReport,

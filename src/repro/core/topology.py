@@ -40,6 +40,17 @@ class Tier:
     a shared edge box saturates once more than ``capacity`` clients hit it
     simultaneously, and the cost engine / fleet simulator charge queueing
     delay beyond that point.
+
+    ``batching`` declares that the tier fuses compatible concurrent
+    requests into one accelerator launch instead of time-slicing them:
+    service time becomes *sublinear* in the number of co-served requests
+    (``costengine.BatchServiceModel``) rather than processor-sharing
+    inflated.  ``batch_overhead`` is the fixed extra cost of a fused
+    multi-item launch (gather/scatter bookkeeping, seconds) and
+    ``batch_marginal`` the fraction of an item's solo service time each
+    *additional* batched item costs (1.0 = no amortization; the floats
+    live here rather than a nested model object so the tier stays a flat
+    hashable record the plan-cache fingerprint can consume directly).
     """
 
     name: str
@@ -48,6 +59,9 @@ class Tier:
     dispatch_overhead: float = 50e-6  # per-stage launch cost, seconds
     has_accelerator: bool = True
     capacity: int = 1  # concurrent service slots
+    batching: bool = False  # fuse concurrent requests into one launch
+    batch_overhead: float = 0.0  # fixed cost per fused multi-item launch
+    batch_marginal: float = 0.35  # per-extra-item fraction of solo time
 
 
 @dataclasses.dataclass(frozen=True)

@@ -6,6 +6,13 @@
 * ``pso_update`` — fused Clerc-Kennedy swarm velocity/position update
   (``pso_ref`` oracle).
 
-Both validate under interpret=True on this CPU container and target TPU
+Both kernels also ship *batched* variants with a leading client axis
+(``render_score_sums_batched`` / ``pso_update_batched``) — one fused
+launch evaluates B clients' swarms, the edge-batching amortization the
+fleet simulator (``repro.cluster``) prices with its
+``BatchServiceModel``.  B=1 reproduces the unbatched kernels
+bit-for-bit (tests/test_batching.py).
+
+All validate under interpret=True on this CPU container and target TPU
 VMEM tiling via explicit BlockSpecs.
 """

@@ -21,3 +21,25 @@ def pso_update(
     vel = jnp.clip(vel, -vmax[None], vmax[None])
     pos = jnp.clip(x + vel, lo[None], hi[None])
     return pos, vel
+
+
+def pso_update_batched(
+    x, v, pbest, gbest, r1, r2, lo, hi,
+    *, inertia: float, cognitive: float, social: float, velocity_clip: float,
+):
+    """Batched oracle: x/v/pbest/r1/r2 (B, N, D), gbest (B, D), lo/hi
+    (D,) or (B, D).  Same math as the unbatched oracle per swarm."""
+    b, _, d = x.shape
+    x = x.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    lo = jnp.broadcast_to(lo.astype(jnp.float32), (b, d))[:, None, :]
+    hi = jnp.broadcast_to(hi.astype(jnp.float32), (b, d))[:, None, :]
+    vel = (
+        inertia * v
+        + cognitive * r1.astype(jnp.float32) * (pbest.astype(jnp.float32) - x)
+        + social * r2.astype(jnp.float32) * (gbest[:, None].astype(jnp.float32) - x)
+    )
+    vmax = velocity_clip * (hi - lo)
+    vel = jnp.clip(vel, -vmax, vmax)
+    pos = jnp.clip(x + vel, lo, hi)
+    return pos, vel

@@ -16,6 +16,13 @@ partial sums into the output block (BN,) across the pixel-tile grid axis
 (j == 0 initializes, j > 0 accumulates — the canonical Pallas reduction
 pattern).
 
+Edge batching: ``render_score_sums_batched`` adds a leading client axis
+— grid (B, N/BN, P/BP) — so a whole gather-window's worth of client
+swarms evaluates in one fused launch (the ``BatchingSlotServer`` event
+the fleet simulator prices sublinearly).  Both kernels share the
+``_score_tile`` math, and the batched grid keeps the pixel axis
+innermost, so B=1 reproduces the unbatched kernel bit-for-bit.
+
 VMEM budget at the default BN=8, BP=512, S=48, f32:
   spheres 8*48*4*4 B = 6 KiB, rays/depth/mask ~ 10 KiB,
   (BN, BP, S) intermediates ~= 3 * 8*512*48*4 B = 2.25 MiB  << 16 MiB.
@@ -40,23 +47,12 @@ DEFAULT_BLOCK_N = 8
 DEFAULT_BLOCK_P = 512
 
 
-def _render_score_kernel(
-    spheres_ref,  # (BN, S, 4) f32
-    rays_ref,  # (BP, 3) f32
-    depth_ref,  # (BP,) f32
-    mask_ref,  # (BP,) f32 (0/1)
-    out_ref,  # (BN,) f32 — masked clamped-L1 partial sums
-    *,
-    clamp_t: float,
-    background: float,
-):
-    j = pl.program_id(1)
+def _score_tile(spheres, rays, d_o, msk, *, clamp_t, background):
+    """Masked clamped-L1 partial sums of one (particle, pixel) tile.
 
-    spheres = spheres_ref[...]
-    rays = rays_ref[...]
-    d_o = depth_ref[...]
-    msk = mask_ref[...]
-
+    Shared between the unbatched and the batched (multi-client) kernels
+    so the fused-batch math is the single-client math by construction.
+    """
     c = spheres[:, :, :3]  # (BN, S, 3)
     r = spheres[:, :, 3]  # (BN, S)
 
@@ -78,7 +74,28 @@ def _render_score_kernel(
     d_h = jnp.min(t, axis=-1)  # (BN, BP)
 
     err = jnp.minimum(jnp.abs(d_h - d_o[None, :]), clamp_t)
-    partial = jnp.sum(err * msk[None, :], axis=-1)  # (BN,)
+    return jnp.sum(err * msk[None, :], axis=-1)  # (BN,)
+
+
+def _render_score_kernel(
+    spheres_ref,  # (BN, S, 4) f32
+    rays_ref,  # (BP, 3) f32
+    depth_ref,  # (BP,) f32
+    mask_ref,  # (BP,) f32 (0/1)
+    out_ref,  # (BN,) f32 — masked clamped-L1 partial sums
+    *,
+    clamp_t: float,
+    background: float,
+):
+    j = pl.program_id(1)
+    partial = _score_tile(
+        spheres_ref[...],
+        rays_ref[...],
+        depth_ref[...],
+        mask_ref[...],
+        clamp_t=clamp_t,
+        background=background,
+    )
 
     @pl.when(j == 0)
     def _init():
@@ -87,6 +104,35 @@ def _render_score_kernel(
     @pl.when(j != 0)
     def _acc():
         out_ref[...] = out_ref[...] + partial
+
+
+def _render_score_batched_kernel(
+    spheres_ref,  # (1, BN, S, 4) f32 — one client's particle tile
+    rays_ref,  # (1, BP, 3) f32
+    depth_ref,  # (1, BP) f32
+    mask_ref,  # (1, BP) f32 (0/1)
+    out_ref,  # (1, BN) f32
+    *,
+    clamp_t: float,
+    background: float,
+):
+    j = pl.program_id(2)
+    partial = _score_tile(
+        spheres_ref[...][0],
+        rays_ref[...][0],
+        depth_ref[...][0],
+        mask_ref[...][0],
+        clamp_t=clamp_t,
+        background=background,
+    )
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = partial[None]
+
+    @pl.when(j != 0)
+    def _acc():
+        out_ref[...] = out_ref[...] + partial[None]
 
 
 def render_score_sums(
@@ -129,6 +175,54 @@ def render_score_sums(
         ],
         out_specs=pl.BlockSpec((block_n,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(spheres.astype(jnp.float32), rays.astype(jnp.float32),
+      depth_obs.astype(jnp.float32), mask)
+
+
+def render_score_sums_batched(
+    spheres: jnp.ndarray,  # (B, N, S, 4) — one swarm per client
+    rays: jnp.ndarray,  # (B, P, 3)
+    depth_obs: jnp.ndarray,  # (B, P)
+    mask: jnp.ndarray,  # (B, P) float32 or bool
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_p: int = DEFAULT_BLOCK_P,
+    clamp_t: float = CLAMP_T,
+    background: float = BACKGROUND_DEPTH,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused multi-client population evaluation: score sums, (B, N).
+
+    One Pallas launch with grid (B, N/block_n, P/block_p) — B clients'
+    swarms evaluate together, which is the edge-batching amortization
+    the fleet simulator's ``BatchServiceModel`` prices.  The tile math
+    is ``_score_tile``, shared with the unbatched kernel, and the grid
+    iterates the pixel axis innermost, so each (client, particle-tile)
+    accumulates partial sums in exactly the unbatched order: the B = 1
+    case is bit-for-bit ``render_score_sums``.
+    """
+    bsz, n, s, _ = spheres.shape
+    p = rays.shape[1]
+    assert n % block_n == 0, (n, block_n)
+    assert p % block_p == 0, (p, block_p)
+    mask = mask.astype(jnp.float32)
+
+    grid = (bsz, n // block_n, p // block_p)
+    kernel = functools.partial(
+        _render_score_batched_kernel, clamp_t=clamp_t, background=background
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_n, s, 4), lambda b, i, j: (b, i, 0, 0)),
+            pl.BlockSpec((1, block_p, 3), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_p), lambda b, i, j: (b, j)),
+            pl.BlockSpec((1, block_p), lambda b, i, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, i, j: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.float32),
         interpret=interpret,
     )(spheres.astype(jnp.float32), rays.astype(jnp.float32),
       depth_obs.astype(jnp.float32), mask)

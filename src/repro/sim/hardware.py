@@ -19,6 +19,7 @@ from typing import Dict
 from repro.core import pso, tracker
 from repro.core.camera import Camera
 from repro.core.offload import (
+    BatchServiceModel,
     Environment,
     Link,
     Policy,
@@ -148,12 +149,45 @@ EDGE_GPU = Tier(
     dispatch_overhead=30e-6,
 )
 
+# The roofline tables anchor single-stream utilization: one client's
+# swarm (64 particles) fills ~8% of an accelerator's peak (the same
+# discount TPU_V5E carries).  A tier's accel_flops is that *effective*
+# single-stream rate; device peak is accel_flops / SINGLE_STREAM_UTIL,
+# and batching's amortization is precisely the idle (1 - util) share.
+SINGLE_STREAM_UTIL = 0.08
+
+
+def edge_batch_model(
+    tier: Tier = EDGE_GPU, comp: "StagedComputation" = None
+) -> BatchServiceModel:
+    """Batch service model for an edge tier, calibrated from the
+    roofline tables (``repro.roofline.analysis`` per-chip constants)
+    against the paper-scale per-frame workload: a lone swarm runs at the
+    tier's effective rate, co-batched swarms stream at device peak with
+    HBM bandwidth scaled by the same peak ratio."""
+    from repro.roofline import analysis
+
+    comp = comp if comp is not None else paper_staged()
+    par = sum(s.flops * s.parallel_fraction for s in comp.stages)
+    peak = tier.accel_flops / SINGLE_STREAM_UTIL
+    mem_bw = analysis.HBM_BW * (peak / analysis.PEAK_FLOPS)
+    return BatchServiceModel.from_roofline(
+        peak_flops=peak,
+        effective_flops=tier.accel_flops,
+        mem_bandwidth=mem_bw,
+        flops_per_item=par,
+        bytes_per_item=PAPER_FRAME_BYTES,
+        launch_overhead=tier.dispatch_overhead,
+    )
+
 
 def fleet_star(
     num_edges: int = 2,
     edge_capacity: int = 4,
     client_tier: Tier = THIN_CLIENT_NO_GPU,
     base_link: Link = links.FIVE_G_EDGE,
+    batching: bool = False,
+    comp: "StagedComputation" = None,
 ) -> Topology:
     """The fleet-simulation shape: one thin-client vantage point star-
     connected to ``num_edges`` shared metro-edge GPU boxes.
@@ -162,11 +196,23 @@ def fleet_star(
     (virtualized-accelerator sharing, AVEC-style); each spoke gets its
     own named link so drift can be injected per edge, with latency
     staggered a little per spoke so latency-weighted dispatch has a real
-    gradient to exploit."""
+    gradient to exploit.  ``batching=True`` declares every edge a fused-
+    launch tier, with its batch model roofline-calibrated against
+    ``comp`` (default: the paper workload) — the cost engine then prices
+    occupancy by batch amortization instead of processor sharing, and
+    the fleet simulator serves it with a ``BatchingSlotServer``."""
+    model = edge_batch_model(comp=comp) if batching else None
     spokes = []
     for i in range(num_edges):
         tier = dataclasses.replace(
-            EDGE_GPU, name=f"{EDGE_GPU.name}_{i}", capacity=edge_capacity
+            EDGE_GPU,
+            name=f"{EDGE_GPU.name}_{i}",
+            capacity=edge_capacity,
+            batching=batching,
+            batch_overhead=model.launch_overhead if batching else 0.0,
+            batch_marginal=(
+                model.marginal_fraction if batching else EDGE_GPU.batch_marginal
+            ),
         )
         link = Link(
             name=f"{base_link.name}_{i}",

@@ -12,6 +12,8 @@ The acceptance contracts:
 * a fixed seed reproduces the fleet run exactly.
 """
 
+import dataclasses
+
 import pytest
 
 from repro.cluster import (
@@ -225,6 +227,38 @@ def test_occupancy_aware_cost_engine():
     assert rep1.network_time == rep0.network_time  # wire unaffected
 
 
+def test_occupancy_on_batching_tier_prices_fused_launch():
+    """A batching tier under occupancy q prices service as the fused
+    batch time of q+1 items — sublinear — instead of processor sharing,
+    and stays bit-for-bit uncontended at zero occupancy."""
+    from repro.core.costengine import BatchServiceModel
+
+    comp = _comp().fused()
+    stage = comp.stages[0]
+    plain = _star(num_edges=1, capacity=1)
+    t0 = CostEngine(plain).compute_time(stage, "edge_0")
+    batched = _star(num_edges=1, capacity=1)
+    batched = Topology(
+        tiers={
+            "hub": batched.tier("hub"),
+            "edge_0": dataclasses.replace(
+                batched.tier("edge_0"), batching=True,
+                batch_overhead=1e-4, batch_marginal=0.25,
+            ),
+        },
+        links=dict(batched.links),
+        home="hub",
+        wrapper=batched.wrapper,
+    )
+    # zero occupancy: identical to the dedicated-machine price
+    assert CostEngine(batched).compute_time(stage, "edge_0") == t0
+    # q=3 others: fused launch of 4, NOT 4x processor sharing
+    got = CostEngine(batched, {"edge_0": 3}).compute_time(stage, "edge_0")
+    model = BatchServiceModel(launch_overhead=1e-4, marginal_fraction=0.25)
+    assert got == model.batch_time([t0] * 4)
+    assert got < CostEngine(plain, {"edge_0": 3}).compute_time(stage, "edge_0")
+
+
 def test_plan_report_compute_by_tier_breakdown():
     comp = _comp()
     topo = _star(num_edges=1)
@@ -249,6 +283,10 @@ def test_dispatch_policies_spread_and_prefer_cheap_spokes():
     # latency-weighted sends the first client to the lowest-latency spoke
     lw = run_fleet(topo, comp, 1, num_frames=10, dispatch="latency_weighted")
     assert lw.clients[0].edge == "edge_0"
+    # with no open batches (admission-time dispatch), batch affinity
+    # reduces to join-the-shortest-queue striping
+    ba = run_fleet(topo, comp, 6, num_frames=10, dispatch="batch_affinity")
+    assert [e.clients for e in ba.edges] == [2, 2, 2]
     with pytest.raises(ValueError):
         run_fleet(topo, comp, 1, num_frames=10, dispatch="nope")
 
@@ -309,6 +347,26 @@ def test_plan_cache_hit_rate_in_steady_state_32_client_sweep():
     assert stats.lookups >= 32
     assert stats.misses == 2  # one plan per edge
     assert stats.hit_rate >= 0.90
+
+
+def test_capacity_sweep_points_share_one_plan_cache():
+    """The sweep hoists a single PlanCache across its points: every
+    point past the first hits the plans the first one created, so the
+    whole sweep costs O(num_edges) plans, not O(points * edges)."""
+    comp = _comp()
+    topo = _star(num_edges=2)
+    pts = capacity_sweep(topo, comp, (1, 2, 4, 8), num_frames=20)
+    caches = {id(p.result.cache) for p in pts}
+    assert len(caches) == 1  # one shared cache object
+    stats = pts[-1].result.cache.stats
+    assert stats.misses == 2  # one plan per edge for the WHOLE sweep
+    assert stats.lookups == 1 + 2 + 4 + 8
+    assert stats.hit_rate == (stats.lookups - 2) / stats.lookups
+    # a caller-provided cache is respected, not replaced
+    mine = PlanCache()
+    pts2 = capacity_sweep(topo, comp, (1, 2), num_frames=10, cache=mine)
+    assert all(p.result.cache is mine for p in pts2)
+    assert mine.stats.misses == 2 and mine.stats.lookups == 3
 
 
 # ---------------------------------------------------------------------------

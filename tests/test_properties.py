@@ -1,0 +1,195 @@
+"""Property-based hardening of the cost/event stack.
+
+Invariants the rest of the system leans on, sampled over randomized
+inputs (hypothesis, or the deterministic conftest shim when it is not
+installed):
+
+* plan cost is monotone in link latency — a slower link can never make
+  an offloaded plan cheaper;
+* ``PlanReport.compute_by_tier`` partitions ``compute_time`` exactly;
+* ``PlanReport.jittered_total`` is exactly the plan total with every
+  recorded leg re-drawn — value AND rng-consumption order;
+* ``BatchServiceModel`` service times are >= the largest member's solo
+  time, never worse than serializing the launches, and amortize
+  monotonically once a real batch forms (per-item time non-increasing
+  for B >= 2; the 1 -> 2 step additionally needs the fusion overhead to
+  be amortizable, since a batch of one pays no overhead at all).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.costengine import BatchServiceModel, CostEngine
+from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
+from repro.core.topology import Link, Tier, Topology, WrapperModel, sample_latency
+
+
+def _comp(n_stages=3, frame_bytes=400_000, flops=4e9):
+    sources = (DataItem("frame", frame_bytes, CLIENT),)
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 15_000)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=flops / n_stages,
+                inputs=(prev,),
+                outputs=(out,),
+                parallel_fraction=0.9,
+            )
+        )
+        prev = out.name
+    return StagedComputation("prop", sources, tuple(stages), (prev,))
+
+
+def _two_tier(latency, jitter=0.0, bandwidth=100e6):
+    client = Tier("client", 30e9, 20e9, has_accelerator=False)
+    server = Tier("server", 1e12, 40e9)
+    link = Link("uplink", bandwidth, latency, jitter)
+    return Topology.two_tier(client, server, link, wrapper=WrapperModel())
+
+
+# ---------------------------------------------------------------------------
+# cost-engine invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.floats(min_value=1e-5, max_value=50e-3),
+    st.floats(min_value=1e-5, max_value=50e-3),
+    st.integers(min_value=1, max_value=4),
+)
+def test_plan_cost_monotone_in_link_latency(lat_a, lat_b, n_remote):
+    """Same placements, slower link => total cost can only grow."""
+    comp = _comp(n_stages=4)
+    lo, hi = sorted((lat_a, lat_b))
+    placements = tuple(
+        "server" if i < n_remote else "client" for i in range(4)
+    )
+    cheap = CostEngine(_two_tier(lo)).evaluate(comp, placements)
+    dear = CostEngine(_two_tier(hi)).evaluate(comp, placements)
+    assert dear.total_time >= cheap.total_time
+    assert dear.network_time >= cheap.network_time
+    # compute and wrapper terms never depend on the link's latency
+    assert dear.compute_time == cheap.compute_time
+    assert dear.wrapper_time == cheap.wrapper_time
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2 ** 16 - 1),
+    st.integers(min_value=1, max_value=5),
+)
+def test_compute_by_tier_partitions_compute_time(seed, n_stages):
+    """The per-tier breakdown sums to the total compute term exactly
+    (same additions, so approx only up to float re-association)."""
+    rng = np.random.default_rng(seed)
+    comp = _comp(n_stages=n_stages)
+    topo = _two_tier(5e-3)
+    placements = tuple(
+        rng.choice(["client", "server"]) for _ in range(n_stages)
+    )
+    rep = CostEngine(topo).evaluate(comp, placements)
+    by_tier = dict(rep.compute_by_tier)
+    assert set(by_tier) <= {"client", "server"}
+    assert sum(by_tier.values()) == pytest.approx(rep.compute_time, rel=1e-12)
+    assert all(t >= 0.0 for t in by_tier.values())
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2 ** 16 - 1),
+    st.floats(min_value=0.0, max_value=10e-3),
+)
+def test_jittered_total_is_exact_leg_resampling(seed, jitter):
+    """jittered_total == plan total with each recorded leg re-drawn, leg
+    by leg in record order — bit-for-bit, including rng consumption."""
+    comp = _comp(n_stages=4)
+    topo = _two_tier(8e-3, jitter=jitter)
+    rep = CostEngine(topo).evaluate(
+        comp, ("server", "server", "client", "server")
+    )
+    assert rep.legs  # remote placements must record latency legs
+    got = rep.jittered_total(np.random.default_rng(seed))
+    rng = np.random.default_rng(seed)
+    expect = rep.total_time
+    for leg in rep.legs:
+        expect -= leg.latency
+        expect += sample_latency(leg.latency, leg.jitter, rng)
+    assert got == expect  # exact: same ops in the same order
+    if jitter == 0.0:
+        assert got == rep.total_time
+
+
+# ---------------------------------------------------------------------------
+# batch service model invariants
+# ---------------------------------------------------------------------------
+
+
+def _times(draw_ms, count):
+    return [t * 1e-3 for t in draw_ms[:count]]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.floats(min_value=0.0, max_value=1e-3),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.integers(min_value=0, max_value=2 ** 16 - 1),
+    st.integers(min_value=1, max_value=12),
+)
+def test_batch_time_bounds_and_monotonicity(overhead, marginal, seed, n):
+    model = BatchServiceModel(
+        launch_overhead=overhead, marginal_fraction=marginal
+    )
+    rng = np.random.default_rng(seed)
+    ts = list(rng.uniform(0.1e-3, 20e-3, size=n))
+    t = model.batch_time(ts)
+    # a fused batch finishes no earlier than its largest member alone
+    assert t >= max(ts)
+    # and never costs more than one launch overhead plus serial service
+    assert t <= overhead + sum(ts) + 1e-15
+    # growing the batch can only lengthen the fused launch
+    assert model.batch_time(ts + [5e-3]) >= t
+    # a batch of one IS the unbatched launch (golden B=1 anchor)
+    assert model.batch_time(ts[:1]) == ts[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.floats(min_value=0.0, max_value=1e-3),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.floats(min_value=0.1e-3, max_value=20e-3),
+    st.integers(min_value=2, max_value=31),
+)
+def test_batch_amortization_is_sublinear(overhead, marginal, solo, b):
+    """Per-item time of a homogeneous batch is non-increasing in batch
+    size for every B >= 2 — the sublinearity the capacity-knee shift
+    rests on.  (The 1 -> 2 step is NOT unconditional: a batch of one
+    pays no fusion overhead, so fusing a pair only amortizes when
+    ``overhead <= (1 - marginal) * solo`` — asserted separately.)"""
+    model = BatchServiceModel(
+        launch_overhead=overhead, marginal_fraction=marginal
+    )
+    assert model.per_item_time(solo, b + 1) <= model.per_item_time(solo, b)
+    # the 1 -> 2 boundary, exactly at its amortizability condition
+    pair, one = model.per_item_time(solo, 2), model.per_item_time(solo, 1)
+    if overhead <= (1.0 - marginal) * solo:
+        assert pair <= one * (1 + 1e-12)
+    else:
+        assert pair > one * (1 - 1e-12)
+    # with no fixed overhead the whole batch is strictly sublinear in B
+    # for any real amortization (marginal < 1)
+    free = BatchServiceModel(launch_overhead=0.0, marginal_fraction=marginal)
+    if marginal < 1.0:
+        assert free.batch_time([solo] * b) < b * solo
+
+
+def test_batch_model_validates_parameters():
+    with pytest.raises(ValueError):
+        BatchServiceModel(launch_overhead=-1e-6)
+    with pytest.raises(ValueError):
+        BatchServiceModel(marginal_fraction=1.5)
+    assert BatchServiceModel().batch_time([]) == 0.0
