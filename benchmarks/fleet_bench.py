@@ -152,6 +152,13 @@ def main() -> None:
             f"unbatched={knees['unbatched']} clients, "
             f"batched={knees['batched']} clients ({shift:.2f}x)"
         )
+        if not knees["unbatched"]:
+            # shift would be inf — a vacuous pass; both curves below the
+            # real-time bar means the star/sweep regressed, not batching
+            raise SystemExit(
+                f"unbatched capacity knee is 0 (no swept client count "
+                f"held {KNEE_FPS:.0f} fps) — the shift gate is vacuous"
+            )
         if shift < 1.5:
             raise SystemExit(
                 f"batched capacity knee only {shift:.2f}x the unbatched one "

@@ -20,10 +20,17 @@ home tier + one edge server; dispatch decides which edge that is.
   take the argmin predicted step latency.  This is the paper's RAPID
   "should I offload?" decision extended to "offload *where*?".
 * ``batch_affinity``   — prefer the edge currently *gathering* the
-  largest open batch (joining a forming batch amortizes its launch and
-  adds no extra queueing), then fall back to join-the-shortest-queue.
-  On non-batching edges every open batch is size 0 and this reduces to
-  ``least_queue`` exactly.
+  largest open batch *compatible with this client's computation*
+  (joining a forming batch amortizes its launch and adds no extra
+  queueing; a foreign-key batch is just queue ahead of us), then fall
+  back to join-the-shortest-queue.
+  Whenever no batch is open the policy reduces to ``least_queue``
+  exactly — which covers non-batching edges, and also the shipped
+  ``run_fleet`` usage, where all clients are placed once at t=0 before
+  any request is submitted.  Like ``least_queue``'s live load term, the
+  affinity term only starts mattering with mid-run (re)dispatch
+  (multi-edge migration — a ROADMAP follow-up); it is unit-tested
+  directly against servers with open batches.
 
 All ties break on edge name, so every policy is deterministic.
 """
@@ -120,13 +127,21 @@ class LatencyWeightedDispatch:
 
 
 class BatchAffinityDispatch:
+    """Join the edge gathering the largest open batch, else the
+    shortest queue.  Open batches only exist while requests are in
+    flight, so at ``run_fleet``'s t=0 admission-time placement this is
+    ``least_queue``; the affinity term is for mid-run (re)dispatch."""
+
     name = "batch_affinity"
 
     def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        # keyed by the computation this client would submit (run_fleet
+        # submits key=comp.name): only a *compatible* open batch can be
+        # joined; a foreign-key batch is just queue ahead of us
         return min(
             ctx.edges,
             key=lambda e: (
-                -ctx.servers[e].open_batch_size(),
+                -ctx.servers[e].open_batch_size(ctx.comp.name),
                 ctx.servers[e].load(ctx.now) + ctx.assignments.get(e, 0),
                 e,
             ),

@@ -90,6 +90,7 @@ class SlotServer:
         heapq.heapify(self._slots)
         self._finishes: List[float] = []  # in-flight request finish times
         self.admitted = 0
+        self.batches = 0  # uniform stats with BatchingSlotServer: never fuses
         self.busy_time = 0.0
         self.total_wait = 0.0
         self._last_admit = float("-inf")
@@ -121,6 +122,10 @@ class SlotServer:
     @property
     def mean_wait(self) -> float:
         return self.total_wait / self.admitted if self.admitted else 0.0
+
+    @property
+    def mean_batch_size(self) -> float:
+        return 0.0
 
     # --- uniform service API (shared with BatchingSlotServer) -----------
 

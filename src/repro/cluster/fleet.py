@@ -25,9 +25,12 @@ Timing model per processed frame (documented approximation): all
 non-service time — home compute, wrapper, uplink/downlink wire and
 latency — is charged *before* the request reaches its first contended
 tier; the request then holds one slot per remote tier, in placement
-order, for that tier's compute share.  Total frame latency is therefore
-``resampled plan total + sum of queue waits``, which keeps the
-uncontended case exactly the analytic model.
+order, until that tier releases it (its solo compute share on FIFO
+edges; the fused batch finish on batching edges).  Total frame latency
+is therefore ``resampled plan total + sum of queue waits + batch
+inflation``, which keeps the uncontended/unbatched case exactly the
+analytic model while keeping recorded finishes consistent with the
+event timeline under batching.
 """
 
 from __future__ import annotations
@@ -85,7 +88,10 @@ class ClientResult:
     stats: LoopStats
     plan: PlanReport
     replans: int
-    total_wait: float  # summed queue wait over processed frames
+    # summed non-plan time over processed frames: queue wait, plus on
+    # batching edges gather-window dwell and batch service inflation
+    # (EdgeLoad.mean_wait counts only the pre-service part)
+    total_wait: float
 
     @property
     def mean_wait(self) -> float:
@@ -362,9 +368,20 @@ def run_fleet(
             vidx=vidx,
             wait_acc=wait_acc,
             arrived=arrived,
+            service=service,
         ) -> None:
-            # wait includes any gather-window dwell on batching edges
-            wait = wait_acc + (svc_start - arrived)
+            # wait has two parts: queue + gather-window dwell before the
+            # slot (svc_start - arrived), and batch service inflation —
+            # the member is occupied until the BATCH finish svc_end, not
+            # its solo finish svc_start + service, and `finish` rebuilds
+            # the frame time from the solo `sampled` total.  Kept as a
+            # separate term (not folded into svc_start) because FIFO
+            # serving and batches of one have svc_end == svc_start +
+            # service by the same float ops, so the inflation is exactly
+            # 0.0 and the zero-wait golden equivalences stay bit-for-bit.
+            wait = wait_acc + (svc_start - arrived) + (
+                svc_end - (svc_start + service)
+            )
             if vidx + 1 < len(c.visits):
                 q.schedule(svc_end, lambda: visit(c, vidx + 1, wait))
             else:
@@ -434,8 +451,8 @@ def run_fleet(
             admitted=servers[e].admitted,
             busy_time=servers[e].busy_time,
             mean_wait=servers[e].mean_wait,
-            batches=getattr(servers[e], "batches", 0),
-            mean_batch_size=getattr(servers[e], "mean_batch_size", 0.0),
+            batches=servers[e].batches,
+            mean_batch_size=servers[e].mean_batch_size,
         )
         for e in edges
     ]

@@ -20,9 +20,15 @@ import numpy as np
 import pytest
 
 from repro.cluster import run_fleet
-from repro.cluster.events import BatchingSlotServer, EventQueue, SlotServer
+from repro.cluster.dispatch import DispatchContext, make_dispatch
+from repro.cluster.events import (
+    BatchingSlotServer,
+    EventQueue,
+    LinkTable,
+    SlotServer,
+)
 from repro.core.costengine import BatchServiceModel
-from repro.core.offload import Link, Tier, Topology, WrapperModel
+from repro.core.offload import Link, Policy, Tier, Topology, WrapperModel
 from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
 from repro.kernels import ops, pso_ref, pso_update as kmod, ref
 from repro.kernels import render_score as rs_kernel
@@ -284,6 +290,49 @@ def test_incompatible_keys_do_not_fuse():
     assert srv.batches == 2  # one per key: different kernels cannot fuse
     assert got["a"] == (5e-3, 7e-3)
     assert got["b"] == (6e-3, 8e-3)
+
+
+def test_batch_affinity_prefers_open_batches_over_shorter_queues():
+    """The mid-run (re)dispatch contract, exercised directly: while a
+    batch is actually gathering, affinity overrides join-the-shortest-
+    queue; with no batch open it IS least_queue (which is all t=0
+    admission-time placement in ``run_fleet`` ever sees)."""
+    topo = _star(num_edges=2, batching=True)
+    comp = _comp()
+    q = EventQueue()
+    servers = {
+        e: BatchingSlotServer(
+            e, capacity=2, queue=q, model=BatchServiceModel(),
+            gather_window=5e-3,
+        )
+        for e in ("edge_0", "edge_1")
+    }
+    ctx = DispatchContext(
+        topo=topo,
+        comp=comp,
+        policy=Policy.AUTO,
+        edges=["edge_0", "edge_1"],
+        servers=servers,
+        link_table=LinkTable(topo),
+        assignments={"edge_0": 0, "edge_1": 2},
+    )
+    disp = make_dispatch("batch_affinity")
+    # no batch open anywhere: exact least_queue fallback
+    assert disp.assign(0, ctx) == "edge_0"
+    # a COMPATIBLE batch gathering on the *busier* edge beats the
+    # shorter queue (run_fleet submits under key=comp.name)
+    servers["edge_1"].submit(0.0, 2e-3, lambda s, f: None, key=comp.name)
+    assert servers["edge_1"].open_batch_size(comp.name) == 1
+    assert disp.assign(1, ctx) == "edge_1"
+    # a foreign-key batch cannot be joined — it is just queue ahead of
+    # us, so it must NOT attract this client's computation
+    servers["edge_0"].submit(1e-3, 2e-3, lambda s, f: None, key="other")
+    assert servers["edge_0"].open_batch_size(comp.name) == 0
+    assert disp.assign(2, ctx) == "edge_1"
+    # windows close and the batches drain: back to least_queue
+    q.run()
+    ctx.now = 1.0
+    assert disp.assign(3, ctx) == "edge_0"
 
 
 def test_batching_shifts_the_capacity_knee():
