@@ -12,13 +12,21 @@ multi-client launches (``BatchingSlotServer`` + roofline-calibrated
 largest swept client count whose mean achieved fps stays >= the real-
 time threshold).  CI asserts the batched knee lands at >= 1.5x the
 unbatched one.
+
+``--migration`` sweeps the *hotspot star* (``hardware.hotspot_star``:
+one weak edge that saturates under load-blind striping) twice — static
+least-queue dispatch vs the same dispatch plus the live
+``MigrationController`` — and CI-asserts that at the hotspot point
+migration strictly improves BOTH p99 frame latency (>= 10%) and drop
+rate (>= 40%), while staying within the hysteresis flap bound
+(<= MIG_MAX_MOVES_PER_CLIENT moves per client).
 """
 
 from __future__ import annotations
 
 import argparse
 
-from repro.cluster import capacity_sweep
+from repro.cluster import MigrationConfig, capacity_sweep
 from repro.core.offload import Policy
 from repro.net import links
 from repro.sim import hardware
@@ -26,6 +34,13 @@ from repro.sim import hardware
 # the paper's "real-time" bar for the knee: 25 fps (Fig. 3 discussion —
 # below this the gap distribution visibly degrades tracking)
 KNEE_FPS = 25.0
+
+# the migration gate runs at the hotspot point: the weak edge is
+# saturated by its stripe share while the strong edges have headroom
+MIG_GATE_CLIENTS = 9
+MIG_P99_MARGIN = 0.90  # migrating p99 must be <= 90% of static
+MIG_DROP_MARGIN = 0.60  # migrating drop rate must be <= 60% of static
+MIG_MAX_MOVES_PER_CLIENT = 3  # hysteresis flap bound
 
 
 def _sweep_rows(client_counts, num_frames) -> list:
@@ -99,6 +114,76 @@ def _batching_rows(client_counts, num_frames, gather_window) -> tuple:
     return rows, knees
 
 
+def _migration_rows(client_counts, num_frames) -> tuple:
+    """Sweep the hotspot star twice — static least-queue dispatch vs
+    live migration — surfacing each point's migration stats (count,
+    mean state-transfer latency) in its report row."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    rows = []
+    curves = {}
+    for mode, mig in (
+        ("static", None),
+        ("migrate", MigrationConfig(min_dwell_frames=10)),
+    ):
+        pts = capacity_sweep(
+            topo,
+            comp,
+            client_counts,
+            num_frames=num_frames,
+            policy=Policy.AUTO,
+            dispatch="least_queue",
+            migration=mig,
+        )
+        curves[mode] = {p.num_clients: p for p in pts}
+        for p in pts:
+            r = p.result
+            rows.append((
+                f"fleet/{mode}_n{p.num_clients}",
+                r.mean_loop_time * 1e6,
+                f"fps={p.fps:.1f};drop={p.drop_rate:.3f};"
+                f"p99_ms={p.p99 * 1e3:.1f};migrations={p.migrations};"
+                f"mig_lat_ms={p.mean_migration_latency * 1e3:.2f}",
+            ))
+    return rows, curves
+
+
+def _assert_migration_gate(curves) -> None:
+    static = curves["static"][MIG_GATE_CLIENTS]
+    mig = curves["migrate"][MIG_GATE_CLIENTS]
+    print(
+        f"# hotspot @ {MIG_GATE_CLIENTS} clients: "
+        f"p99 {static.p99 * 1e3:.1f} -> {mig.p99 * 1e3:.1f} ms, "
+        f"drop {static.drop_rate:.3f} -> {mig.drop_rate:.3f}, "
+        f"{mig.migrations} migrations "
+        f"(mean transfer {mig.mean_migration_latency * 1e3:.2f} ms)"
+    )
+    if static.drop_rate <= 0.0:
+        # nothing saturates => both gates would be vacuous; the scenario
+        # regressed, not migration
+        raise SystemExit(
+            "static hotspot run dropped no frames — the weak edge no "
+            "longer saturates and the migration gate is vacuous"
+        )
+    if mig.p99 > static.p99 * MIG_P99_MARGIN:
+        raise SystemExit(
+            f"migration p99 {mig.p99 * 1e3:.1f} ms not <= "
+            f"{MIG_P99_MARGIN:.0%} of static {static.p99 * 1e3:.1f} ms"
+        )
+    if mig.drop_rate > static.drop_rate * MIG_DROP_MARGIN:
+        raise SystemExit(
+            f"migration drop rate {mig.drop_rate:.3f} not <= "
+            f"{MIG_DROP_MARGIN:.0%} of static {static.drop_rate:.3f}"
+        )
+    per_client = mig.result.migration.per_client()
+    worst = max(per_client.values(), default=0)
+    if worst > MIG_MAX_MOVES_PER_CLIENT:
+        raise SystemExit(
+            f"a client migrated {worst} times (> "
+            f"{MIG_MAX_MOVES_PER_CLIENT}) — hysteresis is not damping"
+        )
+
+
 def bench() -> list:
     return _sweep_rows((1, 2, 4, 8, 16, 32), num_frames=300)
 
@@ -117,13 +202,26 @@ def main() -> None:
         "capacity-knee shift at the 25 fps threshold",
     )
     ap.add_argument(
+        "--migration",
+        action="store_true",
+        help="sweep the hotspot star with static vs migrating dispatch "
+        "and assert the p99/drop improvement and flap bound",
+    )
+    ap.add_argument(
         "--gather-window",
         type=float,
         default=2e-3,
         help="batch gather window, seconds (batching mode)",
     )
     args = ap.parse_args()
-    if args.batching:
+    if args.migration:
+        counts = (
+            (3, 6, MIG_GATE_CLIENTS)
+            if args.smoke
+            else (3, 6, MIG_GATE_CLIENTS, 12, 16)
+        )
+        rows, curves = _migration_rows(counts, num_frames=300)
+    elif args.batching:
         counts = (
             (1, 2, 4, 6, 8, 12, 16, 24, 32)
             if args.smoke
@@ -141,7 +239,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    if args.batching:
+    if args.migration:
+        _assert_migration_gate(curves)
+    elif args.batching:
         shift = (
             knees["batched"] / knees["unbatched"]
             if knees["unbatched"]

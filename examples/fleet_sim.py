@@ -3,15 +3,22 @@
 Runs a capacity sweep of paper-style thin clients against two shared
 metro-edge GPU boxes, compares dispatch policies, injects Wi-Fi-grade
 latency drift on one spoke mid-run and shows that only the affected
-clients re-plan (the RAPID adaptive loop at fleet scale), then turns on
-edge batching and shows the fused-launch capacity lift on a wired star.
+clients re-plan (the RAPID adaptive loop at fleet scale), turns on
+edge batching and shows the fused-launch capacity lift on a wired star,
+and finally arms live migration on a hotspot star — clients drain off
+the saturated weak edge mid-run, carrying their pose + swarm state.
 
   PYTHONPATH=src python examples/fleet_sim.py
 """
 
 from __future__ import annotations
 
-from repro.cluster import LinkDrift, capacity_sweep, run_fleet
+from repro.cluster import (
+    LinkDrift,
+    MigrationConfig,
+    capacity_sweep,
+    run_fleet,
+)
 from repro.core.offload import Policy
 from repro.net import links
 from repro.sim import hardware
@@ -75,6 +82,32 @@ def main() -> None:
                 f"{n:7d}  {mode:9s}  {r.mean_achieved_fps:5.1f}  "
                 f"{r.drop_rate:6.3f}  {mbs:10.1f}"
             )
+
+    print("\n== live migration: hotspot star (edge_0 is 8x slower) ==")
+    hotspot = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    for mode, mig in (
+        ("static", None),
+        ("migrate", MigrationConfig(min_dwell_frames=10)),
+    ):
+        r = run_fleet(
+            hotspot, comp, num_clients=9, num_frames=300,
+            dispatch="least_queue", migration=mig,
+        )
+        loads = ", ".join(
+            f"{e.name}:{e.clients}(peak {e.peak_load})" for e in r.edges
+        )
+        print(
+            f"{mode:8s} fps={r.mean_achieved_fps:5.1f} "
+            f"drop={r.drop_rate:.3f} p99={r.p99_loop_time * 1e3:6.1f}ms "
+            f"[{loads}]"
+        )
+        if r.migration is not None:
+            for rec in r.migration.records:
+                print(
+                    f"  client {rec.client}: {rec.src} -> {rec.dst} at "
+                    f"t={rec.time:.2f}s, {rec.nbytes / 1e3:.1f} kB of "
+                    f"state in {rec.latency * 1e3:.2f} ms"
+                )
 
 
 if __name__ == "__main__":

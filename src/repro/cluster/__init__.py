@@ -4,8 +4,9 @@ The paper proves one weak client + one strong server works; this package
 asks how many such clients a shared pool of edge servers sustains.  See
 ``fleet.run_fleet`` / ``fleet.capacity_sweep`` for the front-end,
 ``events`` for the discrete-event engine, ``dispatch`` for edge
-selection policies, and ``plancache`` for plan caching with
-drift-triggered incremental re-planning.
+selection policies, ``plancache`` for plan caching with drift-triggered
+incremental re-planning, and ``migration`` for mid-run client
+re-dispatch with hysteresis (live migration).
 """
 
 from repro.cluster.dispatch import (  # noqa: F401
@@ -26,6 +27,13 @@ from repro.cluster.fleet import (  # noqa: F401
     SweepPoint,
     capacity_sweep,
     run_fleet,
+)
+from repro.cluster.migration import (  # noqa: F401
+    MigrationConfig,
+    MigrationController,
+    MigrationRecord,
+    MigrationStats,
+    tracker_state_nbytes,
 )
 from repro.cluster.plancache import (  # noqa: F401
     DriftDetector,

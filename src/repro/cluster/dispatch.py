@@ -5,14 +5,19 @@ paper's laptop), and several edge servers hang off it on their own
 links.  Each client's *plan* is still the paper's two-machine problem:
 home tier + one edge server; dispatch decides which edge that is.
 
+Every policy runs in two regimes: once per client at admission (t=0),
+and — when ``run_fleet(migration=...)`` arms the
+:class:`~repro.cluster.migration.MigrationController` — again at every
+mid-run re-dispatch consideration, where the live server state finally
+differs from the assignment counts.
+
 * ``round_robin``      — static striping, the baseline every serving
   stack starts with.
 * ``least_queue``      — pick the edge with the fewest in-flight plus
-  assigned requests (join-the-shortest-queue).  Today dispatch runs
-  once per client at admission (t=0), where the live ``SlotServer``
-  load term is still zero and this reduces to assignment-count
-  striping; the live term starts mattering with mid-run re-dispatch
-  (multi-edge migration — a ROADMAP follow-up).
+  assigned requests (join-the-shortest-queue).  At admission (t=0) the
+  live ``SlotServer`` load term is still zero and this reduces to
+  assignment-count striping; at mid-run re-dispatch the in-flight term
+  is real and the policy follows the actual queues.
 * ``latency_weighted`` — price a plan against every edge with the
   occupancy-aware cost engine (queueing inflation from current
   assignments; on a ``batching`` tier that inflation is the sublinear
@@ -25,12 +30,10 @@ home tier + one edge server; dispatch decides which edge that is.
   queueing; a foreign-key batch is just queue ahead of us), then fall
   back to join-the-shortest-queue.
   Whenever no batch is open the policy reduces to ``least_queue``
-  exactly — which covers non-batching edges, and also the shipped
-  ``run_fleet`` usage, where all clients are placed once at t=0 before
-  any request is submitted.  Like ``least_queue``'s live load term, the
-  affinity term only starts mattering with mid-run (re)dispatch
-  (multi-edge migration — a ROADMAP follow-up); it is unit-tested
-  directly against servers with open batches.
+  exactly — which covers non-batching edges and all admission-time
+  placement.  As the migration controller's target policy it is *live*:
+  a migrating client is steered toward the edge gathering an open batch
+  under its computation key (tested in tests/test_migration.py).
 
 All ties break on edge name, so every policy is deterministic.
 """
@@ -130,7 +133,9 @@ class BatchAffinityDispatch:
     """Join the edge gathering the largest open batch, else the
     shortest queue.  Open batches only exist while requests are in
     flight, so at ``run_fleet``'s t=0 admission-time placement this is
-    ``least_queue``; the affinity term is for mid-run (re)dispatch."""
+    ``least_queue``; as the migration controller's target policy the
+    affinity term fires for real — migrating clients are steered toward
+    edges with a forming batch under their computation key."""
 
     name = "batch_affinity"
 

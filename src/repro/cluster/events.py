@@ -93,6 +93,7 @@ class SlotServer:
         self.batches = 0  # uniform stats with BatchingSlotServer: never fuses
         self.busy_time = 0.0
         self.total_wait = 0.0
+        self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
 
     def load(self, now: float) -> int:
@@ -117,6 +118,7 @@ class SlotServer:
         self.admitted += 1
         self.busy_time += service
         self.total_wait += start - arrival
+        self.peak_load = max(self.peak_load, self.load(arrival))
         return start, finish
 
     @property
@@ -191,6 +193,7 @@ class BatchingSlotServer:
         self.batches = 0
         self.busy_time = 0.0
         self.total_wait = 0.0
+        self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
 
     def load(self, now: float) -> int:
@@ -227,14 +230,15 @@ class BatchingSlotServer:
         self.admitted += 1
         if self.gather_window <= 0.0:
             self._serve(arrival, [(arrival, service, done)])
-            return
-        items = self._open.get(key)
-        if items is None:
-            self._open[key] = items = []
-            self._queue.schedule(
-                arrival + self.gather_window, lambda k=key: self._close(k)
-            )
-        items.append((arrival, service, done))
+        else:
+            items = self._open.get(key)
+            if items is None:
+                self._open[key] = items = []
+                self._queue.schedule(
+                    arrival + self.gather_window, lambda k=key: self._close(k)
+                )
+            items.append((arrival, service, done))
+        self.peak_load = max(self.peak_load, self.load(arrival))
 
     def _close(self, key) -> None:
         self._serve(self._queue.now, self._open.pop(key))

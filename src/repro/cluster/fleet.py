@@ -19,7 +19,11 @@ The adaptive loop: plans come from a shared ``plancache.PlanCache``
 ``plancache.DriftDetector`` watches the leg latencies its requests
 actually drew, and when they drift past the threshold only that client
 re-plans, against the drifted link — a cache miss by fingerprint,
-leaving every other client's cached plan untouched.
+leaving every other client's cached plan untouched.  With a
+``migration.MigrationConfig`` armed, re-planning escalates to
+*re-dispatch*: the client can move to a different edge mid-run, paying
+a priced pose + swarm state transfer, under dwell/improvement
+hysteresis (see ``cluster/migration.py``).
 
 Timing model per processed frame (documented approximation): all
 non-service time — home compute, wrapper, uplink/downlink wire and
@@ -51,6 +55,11 @@ from repro.cluster.events import (
     EventQueue,
     LinkTable,
     SlotServer,
+)
+from repro.cluster.migration import (
+    MigrationConfig,
+    MigrationController,
+    MigrationStats,
 )
 from repro.cluster.plancache import (
     DriftDetector,
@@ -84,7 +93,7 @@ class LinkDrift:
 @dataclasses.dataclass
 class ClientResult:
     client: int
-    edge: str
+    edge: str  # final edge assignment (migration moves it over time)
     stats: LoopStats
     plan: PlanReport
     replans: int
@@ -92,6 +101,7 @@ class ClientResult:
     # batching edges gather-window dwell and batch service inflation
     # (EdgeLoad.mean_wait counts only the pre-service part)
     total_wait: float
+    migrations: int = 0  # mid-run re-dispatches this client made
 
     @property
     def mean_wait(self) -> float:
@@ -103,13 +113,14 @@ class ClientResult:
 class EdgeLoad:
     name: str
     capacity: int
-    clients: int
+    clients: int  # clients assigned at the END of the run (post-migration)
     admitted: int
     busy_time: float
     mean_wait: float
     # fused-launch accounting (0 / 0.0 on non-batching edges)
     batches: int = 0
     mean_batch_size: float = 0.0
+    peak_load: int = 0  # max concurrent in-flight seen at an admission
 
 
 @dataclasses.dataclass
@@ -119,6 +130,7 @@ class FleetResult:
     cache: PlanCache
     num_frames: int
     duration: float
+    migration: Optional[MigrationStats] = None  # set when migration is armed
 
     @property
     def drop_rate(self) -> float:
@@ -144,6 +156,10 @@ class FleetResult:
     @property
     def total_replans(self) -> int:
         return sum(c.replans for c in self.clients)
+
+    @property
+    def total_migrations(self) -> int:
+        return self.migration.count if self.migration is not None else 0
 
     def _loop_times(self) -> List[float]:
         return [
@@ -177,6 +193,7 @@ class _Client:
         self.last_processed = -1
         self.next_i = 0
         self.replans = 0
+        self.migrations = 0
         self.total_wait = 0.0
         self.drifted = False
         self.frames_since_probe = 0
@@ -211,6 +228,7 @@ def run_fleet(
     probe_every: int = 30,
     batching: Optional[bool] = None,
     gather_window: float = 2e-3,
+    migration: Optional[MigrationConfig] = None,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -237,6 +255,16 @@ def run_fleet(
     False forces plain FIFO); ``None`` respects each tier.  The trade:
     a wider gather window fuses more (cheaper service under load) but
     adds up to that much pre-service latency per frame.
+
+    Migration: passing a :class:`~repro.cluster.migration
+    .MigrationConfig` arms a ``MigrationController`` — at every frame
+    finish (and immediately on detected link drift) the client's
+    placement is reconsidered against live queue depths and open
+    batches, gated by the config's dwell/improvement hysteresis.  A
+    migrating client drains its just-finished frame, pays the priced
+    pose + swarm state transfer before its next frame starts, and
+    re-plans against the new edge through the shared plan cache.
+    ``migration=None`` (default) is bit-for-bit the static fleet.
     """
     if num_clients < 1:
         raise ValueError("need at least one client")
@@ -326,20 +354,41 @@ def run_fleet(
             )
         )
 
+    controller: Optional[MigrationController] = None
+    if migration is not None:
+        controller = MigrationController(
+            migration,
+            topo=topo,
+            comp=comp_used,
+            policy=policy,
+            planner=planner,
+            cache=cache,
+            link_table=link_table,
+            servers=servers,
+            edges=edges,
+            assignments=ctx.assignments,
+        )
+
     # --- event handlers ---------------------------------------------------
+
+    def replan(client: _Client, edge: str) -> None:
+        """Re-plan ``client`` against ``edge`` under current link
+        conditions and reset its adaptive-loop state (shared by the
+        drift-replan and migration paths so they cannot diverge)."""
+        sub = edge_subtopology(topo, edge, link_table)
+        plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
+        client.set_plan(plan, topology_fingerprint(sub))
+        client.drifted = False
+        client.frames_since_probe = 0
+        detector.reset(client.idx)
 
     def start_frame(client: _Client) -> None:
         i = client.next_i
         if i >= num_frames:
             return
         if client.drifted:
-            client.drifted = False
-            sub = edge_subtopology(topo, client.edge, link_table)
-            plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
-            client.set_plan(plan, topology_fingerprint(sub))
+            replan(client, client.edge)
             client.replans += 1
-            client.frames_since_probe = 0
-            detector.reset(client.idx)
         arrival = i * period
         start = max(arrival, client.t_free)
         newest = min(int(start / period), num_frames - 1)
@@ -417,6 +466,32 @@ def run_fleet(
                 sub = edge_subtopology(topo, client.edge, link_table)
                 if topology_fingerprint(sub) != client.plan_fp:
                     client.drifted = True
+        if controller is not None and client.next_i < num_frames:
+            # the just-finished frame IS the drain: re-dispatch decisions
+            # land only at frame boundaries, never with a frame in flight
+            # (and never after the final frame — a client with nothing
+            # left to serve must not record a phantom move)
+            controller.frame_done(client.idx)
+            move = controller.consider(
+                client.idx,
+                client.edge,
+                q.now,
+                # the warm state lives where the current plan computes:
+                # the serving edge, or home for a fully-local plan
+                state_src=(
+                    client.visits[0][0] if client.visits else topo.home
+                ),
+                force=client.drifted,
+            )
+            if move is not None:
+                target, mig_latency = move
+                client.edge = target
+                client.migrations += 1
+                # the state transfer blocks the client between frames;
+                # the move is a re-dispatch, not a replan, so it counts
+                # in ClientResult.migrations rather than replans
+                client.t_free = fin + mig_latency
+                replan(client, target)
         start_frame(client)
 
     for client in clients:
@@ -441,6 +516,7 @@ def run_fleet(
                 plan=client.plan,
                 replans=client.replans,
                 total_wait=client.total_wait,
+                migrations=client.migrations,
             )
         )
     edge_loads = [
@@ -453,6 +529,7 @@ def run_fleet(
             mean_wait=servers[e].mean_wait,
             batches=servers[e].batches,
             mean_batch_size=servers[e].mean_batch_size,
+            peak_load=servers[e].peak_load,
         )
         for e in edges
     ]
@@ -462,6 +539,7 @@ def run_fleet(
         cache=cache,
         num_frames=num_frames,
         duration=max((c.stats.duration for c in client_results), default=0.0),
+        migration=controller.stats if controller is not None else None,
     )
 
 
@@ -481,6 +559,18 @@ class SweepPoint:
     @property
     def p99(self) -> float:
         return self.result.p99_loop_time
+
+    # migration stats surfaced per point (0 / 0.0 when migration is off)
+    # so sweep reports never drop the controller's state between points
+    @property
+    def migrations(self) -> int:
+        m = self.result.migration
+        return m.count if m is not None else 0
+
+    @property
+    def mean_migration_latency(self) -> float:
+        m = self.result.migration
+        return m.mean_latency if m is not None else 0.0
 
 
 def capacity_sweep(

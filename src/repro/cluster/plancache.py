@@ -131,16 +131,25 @@ class PlanCache:
         topo: Topology,
         policy: Policy = Policy.AUTO,
         planner: Optional[str] = None,
+        record_stats: bool = True,
     ) -> Tuple[PlanReport, bool]:
-        """Returns (report, was_hit).  A hit is the stored object itself."""
+        """Returns (report, was_hit).  A hit is the stored object itself.
+
+        ``record_stats=False`` keeps the lookup out of ``stats`` (the
+        plan is still cached on a miss): the migration controller scores
+        every candidate edge once per considered frame, and counting
+        those probes would drown the hit-rate signal that measures
+        actual per-client planning work."""
         key = self.key(comp, topo, policy, planner)
         cached = self._plans.get(key)
         if cached is not None:
-            self.stats.hits += 1
+            if record_stats:
+                self.stats.hits += 1
             return cached, True
         rep = offload.plan(comp, topo, policy, planner=planner)
         self._plans[key] = rep
-        self.stats.misses += 1
+        if record_stats:
+            self.stats.misses += 1
         return rep, False
 
     def invalidate_link(self, link_name: str) -> int:

@@ -341,6 +341,28 @@ class CostEngine:
         t += wire_time(nbytes, links)
         return t
 
+    def migration_time(self, nbytes: int, src: str, dst: str) -> float:
+        """Price a live-migration state transfer like any other leg.
+
+        Moving a client's warm tracker state (hand-model pose + PSO
+        swarm payload) from ``src`` to ``dst`` is an explicit fetch
+        across the path — one propagation latency per link leg,
+        serialization on both ends, wire time per leg, exactly what
+        ``transfer_scalar(..., piggyback=False)`` charges — plus, on a
+        wrapped stack, the RPC envelope of the transfer call itself
+        (proxy/skeleton overhead and the response leg's latency).
+        ``src == dst`` is a no-op (state already there).
+        """
+        if src == dst:
+            return 0.0
+        topo = self.topology
+        t = self.transfer_scalar(nbytes, src, dst, piggyback=False)
+        if topo.wrapped:
+            t += 2 * topo.wrapper.call_overhead
+            for link in topo.path_links(src, dst):
+                t += link.latency  # the envelope's response leg
+        return t
+
     # -- exact plan evaluation ---------------------------------------------
 
     def evaluate(

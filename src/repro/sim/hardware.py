@@ -232,6 +232,49 @@ def fleet_star(
     )
 
 
+def hotspot_star(
+    num_edges: int = 3,
+    edge_capacity: int = 2,
+    weak_factor: float = 8.0,
+    client_tier: Tier = THIN_CLIENT_NO_GPU,
+    base_link: Link = links.GIGABIT_ETHERNET,
+    batching: bool = False,
+) -> Topology:
+    """The asymmetric-load star: ``edge_0`` is a ``weak_factor``-slower
+    box (an older card racked at that site), everything else matches
+    :func:`fleet_star`.
+
+    Load-blind dispatch (round-robin, join-the-shortest-queue) stripes
+    clients evenly, so the weak edge saturates first — the hotspot — and
+    its clients drop frames while the strong edges idle.  Static
+    placement can only re-plan in place; live migration
+    (``cluster.migration``) drains the hotspot toward the strong edges
+    until the predicted per-frame times equalize.  The wired default
+    link keeps the scenario service-bound (the regime where placement,
+    not the network, is the binding constraint)."""
+    topo = fleet_star(
+        num_edges=num_edges,
+        edge_capacity=edge_capacity,
+        client_tier=client_tier,
+        base_link=base_link,
+        batching=batching,
+    )
+    weak = dataclasses.replace(
+        topo.tier("edge_0"),
+        name=f"{EDGE_GPU.name}_0_weak",
+        accel_flops=EDGE_GPU.accel_flops / weak_factor,
+    )
+    tiers = dict(topo.tiers)
+    tiers["edge_0"] = weak
+    return Topology(
+        tiers=tiers,
+        links=dict(topo.links),
+        home=topo.home,
+        wrapper=topo.wrapper,
+        wrapped=topo.wrapped,
+    )
+
+
 def three_tier_environment(device: Tier = THIN_CLIENT_NO_GPU) -> Topology:
     """device -> edge GPU -> cloud TPU chain (the multi-machine scaling
     the paper flags as future work).

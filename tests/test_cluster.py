@@ -369,6 +369,36 @@ def test_capacity_sweep_points_share_one_plan_cache():
     assert mine.stats.misses == 2 and mine.stats.lookups == 3
 
 
+def test_capacity_sweep_surfaces_migration_stats_per_point():
+    """Regression: the sweep must pass each point's migration stats
+    (count, mean migration latency) through to its report row instead
+    of dropping the controller state between points."""
+    from repro.cluster import MigrationConfig
+
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    pts = capacity_sweep(
+        topo,
+        comp,
+        (3, 9),
+        num_frames=90,
+        dispatch="least_queue",
+        migration=MigrationConfig(min_dwell_frames=10),
+    )
+    for p in pts:
+        assert p.result.migration is not None
+        assert p.migrations == p.result.migration.count
+        assert p.mean_migration_latency == p.result.migration.mean_latency
+    # the hotspot actually forces moves at fleet scale, and the priced
+    # state transfer shows up as a nonzero mean latency
+    assert pts[-1].migrations >= 1
+    assert pts[-1].mean_migration_latency > 0.0
+    # migration-off sweeps report zeros, not crashes
+    off = capacity_sweep(topo, comp, (2,), num_frames=20)
+    assert off[0].migrations == 0
+    assert off[0].mean_migration_latency == 0.0
+
+
 # ---------------------------------------------------------------------------
 # drift: incremental re-planning scoped to affected clients
 # ---------------------------------------------------------------------------

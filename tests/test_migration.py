@@ -1,0 +1,529 @@
+"""Live migration: golden off-switch equivalence, migration invariants,
+hysteresis flap bounds, live batch affinity, and state-transfer pricing.
+
+The acceptance contracts:
+* hysteresis thresholds at infinity (or an astronomically large dwell)
+  make ``run_fleet(migration=...)`` event-for-event identical to the
+  static fleet — bit-for-bit on fps/drops/waits, not approx;
+* no frame is ever double-served or lost across a migration, and
+  migration count is monotone non-increasing in the min-dwell;
+* an adversarial alternating-load scenario makes naive greedy
+  re-dispatch (zero dwell, zero threshold) oscillate every frame, while
+  the hysteresis controller moves a bounded number of times and ships a
+  bounded number of state bytes;
+* ``batch_affinity`` is live at re-dispatch time: an edge gathering a
+  compatible open batch attracts the migrating client over an
+  equally-loaded empty edge, and a migrating fleet's mean batch size
+  rises over static striping;
+* state transfer is priced with the cost engine's own leg primitives
+  (envelope + serialization + wire over the current links).
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    LinkDrift,
+    MigrationConfig,
+    MigrationController,
+    run_fleet,
+    tracker_state_nbytes,
+)
+from repro.cluster.events import BatchingSlotServer, EventQueue
+from repro.core.costengine import BatchServiceModel, CostEngine
+from repro.core.offload import Link, Tier, Topology, WrapperModel
+from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
+from repro.sim import hardware
+
+
+def _comp(n_stages=4, frame_bytes=500_000, flops=5e9):
+    sources = (
+        DataItem("frame", frame_bytes, CLIENT),
+        DataItem("h_prev", 108, CLIENT),
+    )
+    stages = []
+    prev = "frame"
+    for i in range(n_stages):
+        out = DataItem(f"x{i}", 20_000)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=flops / n_stages,
+                inputs=(prev, "h_prev") if i == 0 else (prev,),
+                outputs=(out,),
+                parallel_fraction=0.95,
+            )
+        )
+        prev = out.name
+    return StagedComputation("test", sources, tuple(stages), (prev,))
+
+
+def _star(num_edges=2, capacity=1, latency=2e-3, stagger=0.1, jitter=0.0,
+          accel=0.5e12, batching=False, batch_marginal=0.2):
+    hub = Tier("hub", 20e9, 20e9, has_accelerator=False)
+    spokes = [
+        (
+            f"edge_{i}",
+            Tier(
+                f"edge_{i}",
+                accel,
+                40e9,
+                capacity=capacity,
+                batching=batching,
+                batch_marginal=batch_marginal,
+            ),
+            Link(f"link_{i}", 117e6, latency * (1 + stagger * i), jitter),
+        )
+        for i in range(num_edges)
+    ]
+    return Topology.star(("hub", hub), spokes, wrapper=WrapperModel())
+
+
+class _FakeServer:
+    """Minimal live-signal surface the controller reads, with externally
+    scripted queue depth / open batches — the adversarial driver."""
+
+    def __init__(self, capacity=1, gather_window=0.0):
+        self.capacity = capacity
+        self.gather_window = gather_window
+        self.queue_depth = 0
+        self.open_batch = 0
+
+    def load(self, now):
+        return self.queue_depth
+
+    def open_batch_size(self, key=None):
+        return self.open_batch
+
+
+def _controller(config, topo, comp, servers, start_edge="edge_0"):
+    edges = [n for n in topo.tier_names() if n != topo.home]
+    assignments = {e: 0 for e in edges}
+    assignments[start_edge] = 1
+    return MigrationController(
+        config,
+        topo=topo,
+        comp=comp.fused(),
+        servers=servers,
+        edges=edges,
+        assignments=assignments,
+    )
+
+
+def _drive_adversarial(config, frames=120, period=1.0 / 30.0):
+    """Adaptive adversary: whichever edge the client sits on is flooded
+    (deep queue) while the other is emptied, every frame — the shape
+    that makes naive greedy re-dispatch flap forever."""
+    comp = _comp(flops=40e9)  # heavy service: the load term dominates
+    topo = _star(num_edges=2)
+    servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+    ctl = _controller(config, topo, comp, servers)
+    current = "edge_0"
+    for k in range(frames):
+        servers[current].queue_depth = 10
+        other = "edge_1" if current == "edge_0" else "edge_0"
+        servers[other].queue_depth = 0
+        ctl.frame_done(0)
+        move = ctl.consider(0, current, now=k * period, state_src=current)
+        if move is not None:
+            current = move[0]
+    return ctl.stats
+
+
+# ---------------------------------------------------------------------------
+# golden: infinite hysteresis == the static fleet, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 16 - 1))
+def test_infinite_hysteresis_is_the_static_fleet_bit_for_bit(seed):
+    """Both off-switches — astronomically large dwell, infinite
+    improvement threshold — reproduce the migration-free run exactly:
+    identical frame events, waits, plans and edge loads."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    static = run_fleet(topo, comp, 6, num_frames=60, seed=seed)
+    for off in (
+        MigrationConfig(min_dwell_frames=10 ** 9),
+        MigrationConfig(min_dwell_frames=1, improvement_threshold=math.inf),
+    ):
+        frozen = run_fleet(topo, comp, 6, num_frames=60, seed=seed, migration=off)
+        assert frozen.clients == static.clients  # events/waits/plans exact
+        assert frozen.edges == static.edges
+        assert frozen.migration is not None and frozen.migration.count == 0
+
+
+def test_migration_disabled_returns_no_stats():
+    comp = _comp()
+    res = run_fleet(_star(), comp, 2, num_frames=10)
+    assert res.migration is None
+    assert res.total_migrations == 0
+    assert all(c.migrations == 0 for c in res.clients)
+
+
+# ---------------------------------------------------------------------------
+# invariants: nothing lost, nothing double-served, dwell monotonicity
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=2 ** 16 - 1),
+    st.integers(min_value=6, max_value=10),
+)
+def test_no_frame_lost_or_double_served_across_migrations(seed, clients):
+    """Across an actively migrating hotspot run: every client's
+    processed frame indices are unique and strictly increasing, drops
+    account for exactly the remainder, and each processed frame was
+    admitted to exactly one edge server."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    res = run_fleet(
+        topo, comp, clients, num_frames=90, seed=seed,
+        dispatch="least_queue",
+        migration=MigrationConfig(min_dwell_frames=5),
+    )
+    assert res.migration is not None and res.migration.count >= 1
+    processed_total = 0
+    for c in res.clients:
+        idxs = [ev.index for ev in c.stats.processed]
+        assert idxs == sorted(set(idxs))  # unique, strictly increasing
+        assert all(0 <= i < res.num_frames for i in idxs)
+        assert c.stats.dropped == res.num_frames - len(idxs)
+        processed_total += len(idxs)
+    # every processed frame offloaded its single fused stage exactly once
+    assert all(c.plan.compute_by_tier for c in res.clients)
+    assert sum(e.admitted for e in res.edges) == processed_total
+    # every migration is followed by at least one frame on the new edge
+    # — no phantom moves recorded at a client's final frame finish
+    for rec in res.migration.records:
+        after = [
+            ev for ev in res.clients[rec.client].stats.processed
+            if ev.start >= rec.time
+        ]
+        assert after
+
+
+def test_no_phantom_migration_at_the_final_frame_finish():
+    """Regression: a client that just served its last frame has nothing
+    left to move — the controller must not record (and price, and count
+    against the flap bound) a migration it can never act on."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    res = run_fleet(
+        topo, comp, 9, num_frames=11, dispatch="least_queue",
+        migration=MigrationConfig(min_dwell_frames=10),
+    )
+    for rec in res.migration.records:
+        after = [
+            ev for ev in res.clients[rec.client].stats.processed
+            if ev.start >= rec.time
+        ]
+        assert after, "migration recorded after the client's final frame"
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=20),
+    st.integers(min_value=1, max_value=20),
+)
+def test_migration_count_monotone_nonincreasing_in_min_dwell(d1, d2):
+    """Same adversarial observation stream, larger min-dwell => no more
+    migrations (and a zero-dwell naive config is the worst case)."""
+    lo, hi = sorted((d1, d2))
+    cfg = lambda d: MigrationConfig(min_dwell_frames=d, improvement_threshold=0.2)
+    count_lo = _drive_adversarial(cfg(lo)).count
+    count_hi = _drive_adversarial(cfg(hi)).count
+    assert count_lo >= count_hi
+    assert _drive_adversarial(cfg(0)).count >= count_lo
+
+
+# ---------------------------------------------------------------------------
+# the flap test: naive greedy oscillates, hysteresis is bounded
+# ---------------------------------------------------------------------------
+
+
+def test_hysteresis_bounds_flapping_under_adversarial_load():
+    """The adversary floods whichever edge the client occupies.  Naive
+    greedy (zero dwell, zero threshold) migrates every single frame;
+    the hysteresis controller's moves — and therefore the state bytes
+    it ships — are bounded by frames/min_dwell."""
+    frames = 120
+    naive = _drive_adversarial(
+        MigrationConfig(min_dwell_frames=0, improvement_threshold=0.0),
+        frames=frames,
+    )
+    assert naive.count == frames  # oscillates on EVERY frame
+    damped = _drive_adversarial(
+        MigrationConfig(min_dwell_frames=30, improvement_threshold=0.2),
+        frames=frames,
+    )
+    assert damped.count <= frames // 30  # <= 4 moves in 120 frames
+    assert damped.total_bytes <= (frames // 30) * damped.records[0].nbytes
+    assert damped.total_bytes < naive.total_bytes / 20
+
+
+def test_improvement_threshold_blocks_marginal_moves():
+    """A small load imbalance that clears a zero threshold must not
+    clear a large one — the second half of the hysteresis."""
+    comp = _comp(flops=40e9)
+    topo = _star(num_edges=2, stagger=0.0)
+    servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+    servers["edge_0"].queue_depth = 1  # mild pressure on the current edge
+    greedy = _controller(
+        MigrationConfig(min_dwell_frames=0, improvement_threshold=0.0),
+        topo, comp, servers,
+    )
+    greedy.frame_done(0)
+    assert greedy.consider(0, "edge_0", now=0.0, state_src="edge_0") is not None
+    picky = _controller(
+        MigrationConfig(min_dwell_frames=0, improvement_threshold=0.9),
+        topo, comp, servers,
+    )
+    picky.frame_done(0)
+    assert picky.consider(0, "edge_0", now=0.0, state_src="edge_0") is None
+    assert picky.stats.count == 0 and picky.stats.considered == 1
+
+
+def test_drift_forces_consideration_but_not_the_threshold():
+    """force=True (the fleet's drift signal) waives the dwell gate only:
+    an un-dwelled client is considered, but a threshold it cannot clear
+    still pins it in place."""
+    comp = _comp(flops=40e9)
+    topo = _star(num_edges=2, stagger=0.0)
+    servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+    servers["edge_0"].queue_depth = 10
+    ctl = _controller(
+        MigrationConfig(min_dwell_frames=50, improvement_threshold=0.2),
+        topo, comp, servers,
+    )
+    # zero dwell: gated without force, considered and moved with it
+    assert ctl.consider(0, "edge_0", now=0.0, state_src="edge_0") is None
+    assert ctl.stats.considered == 0
+    move = ctl.consider(0, "edge_0", now=0.0, state_src="edge_0", force=True)
+    assert move is not None and move[0] == "edge_1"
+    # but force never overrides the improvement threshold
+    ctl2 = _controller(
+        MigrationConfig(min_dwell_frames=50, improvement_threshold=math.inf),
+        topo, comp, servers,
+    )
+    assert ctl2.consider(0, "edge_0", now=0.0, state_src="edge_0", force=True) is None
+
+
+# ---------------------------------------------------------------------------
+# batch_affinity live: open batches attract migrating clients
+# ---------------------------------------------------------------------------
+
+
+def _batching_servers(comp, queue, window=5e-3):
+    return {
+        e: BatchingSlotServer(
+            e, capacity=2, queue=queue, model=BatchServiceModel(),
+            gather_window=window,
+        )
+        for e in ("edge_0", "edge_1")
+    }
+
+
+@pytest.mark.parametrize("target_policy", ["predicted", "batch_affinity"])
+def test_open_batch_attracts_migrating_client_over_equal_empty_edge(
+    target_policy,
+):
+    """Two equally-loaded batching edges — one in-flight request each —
+    but only edge_1's is an open batch under the client's computation
+    key.  Both target modes must steer the migrating client there: the
+    PR 3 review note (admission-time affinity never sees open batches)
+    exercised for real."""
+    comp = _comp()
+    topo = _star(num_edges=2, stagger=0.0, batching=True)
+    q = EventQueue()
+    servers = _batching_servers(comp, q)
+    ctl = _controller(
+        MigrationConfig(
+            min_dwell_frames=0,
+            improvement_threshold=0.0,
+            target_policy=target_policy,
+        ),
+        topo, comp, servers,
+    )
+    ctl.frame_done(0)
+    # no batch open anywhere: equally-loaded edges, no reason to move
+    assert ctl.consider(0, "edge_0", now=0.0, state_src="edge_0") is None
+    # equal load (one request each), but edge_1's batch is COMPATIBLE
+    servers["edge_0"].submit(0.0, 2e-3, lambda s, f: None, key="other_kernel")
+    servers["edge_1"].submit(0.0, 2e-3, lambda s, f: None, key=comp.fused().name)
+    assert servers["edge_0"].load(1e-3) == servers["edge_1"].load(1e-3) == 1
+    move = ctl.consider(0, "edge_0", now=1e-3, state_src="edge_0")
+    assert move is not None and move[0] == "edge_1"
+    assert move[1] > 0.0  # the state transfer is still priced
+
+
+def test_foreign_key_batch_does_not_attract():
+    comp = _comp()
+    topo = _star(num_edges=2, stagger=0.0, batching=True)
+    q = EventQueue()
+    servers = _batching_servers(comp, q)
+    servers["edge_1"].submit(0.0, 2e-3, lambda s, f: None, key="other_kernel")
+    ctl = _controller(
+        MigrationConfig(min_dwell_frames=0, improvement_threshold=0.0),
+        topo, comp, servers,
+    )
+    ctl.frame_done(0)
+    assert ctl.consider(0, "edge_0", now=1e-3, state_src="edge_0") is None
+
+
+def test_migrating_fleet_raises_mean_batch_size_over_static_striping():
+    """A batching hotspot star: static striping pins batches at the
+    stripe width; migration drains the weak edge into the strong edges'
+    forming batches, so the biggest mean batch grows and drops fall."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=1, batching=True)
+    static = run_fleet(
+        topo, comp, 9, num_frames=150, dispatch="least_queue",
+        gather_window=5e-3,
+    )
+    mig = run_fleet(
+        topo, comp, 9, num_frames=150, dispatch="least_queue",
+        gather_window=5e-3, migration=MigrationConfig(min_dwell_frames=10),
+    )
+    assert mig.migration is not None and mig.migration.count >= 1
+    assert max(e.mean_batch_size for e in mig.edges) > max(
+        e.mean_batch_size for e in static.edges
+    )
+    assert mig.drop_rate < static.drop_rate
+
+
+# ---------------------------------------------------------------------------
+# the hotspot acceptance shape, at test scale
+# ---------------------------------------------------------------------------
+
+
+def test_migration_beats_static_dispatch_on_the_hotspot_star():
+    """One weak edge saturates under load-blind striping; live migration
+    must strictly improve BOTH the drop rate and the p99 frame latency,
+    with a bounded number of moves per client."""
+    comp = hardware.paper_staged()
+    topo = hardware.hotspot_star(num_edges=3, edge_capacity=2)
+    static = run_fleet(topo, comp, 9, num_frames=300, dispatch="least_queue")
+    mig = run_fleet(
+        topo, comp, 9, num_frames=300, dispatch="least_queue",
+        migration=MigrationConfig(min_dwell_frames=10),
+    )
+    assert mig.drop_rate < static.drop_rate
+    assert mig.p99_loop_time < static.p99_loop_time
+    per_client = mig.migration.per_client()
+    assert per_client and max(per_client.values()) <= 3
+    # the weak edge drains; the strong edges absorb the hotspot clients
+    weak_static = next(e for e in static.edges if e.name == "edge_0")
+    weak_mig = next(e for e in mig.edges if e.name == "edge_0")
+    assert weak_mig.clients < weak_static.clients
+
+
+def test_drift_triggers_migration_instead_of_local_retreat():
+    """When a spoke's link degrades, static clients can only re-plan in
+    place (often retreating to the slow local plan); migrating clients
+    re-home to the healthy spoke, carrying their state across."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    drifts = [LinkDrift(time=2.0, link="5g_edge_0", latency=40e-3)]
+    static = run_fleet(topo, comp, 8, num_frames=200, drifts=drifts)
+    mig = run_fleet(
+        topo, comp, 8, num_frames=200, drifts=drifts,
+        migration=MigrationConfig(min_dwell_frames=10),
+    )
+    assert mig.migration is not None and mig.migration.count >= 1
+    for rec in mig.migration.records:
+        assert rec.src == "edge_0" and rec.dst == "edge_1"
+        assert rec.state_src == "edge_0"
+        assert rec.latency > 0.0
+        assert rec.nbytes == tracker_state_nbytes()
+    # every migrated client now lives on the healthy spoke
+    moved = {rec.client for rec in mig.migration.records}
+    for c in mig.clients:
+        if c.client in moved:
+            assert c.edge == "edge_1" and c.migrations >= 1
+    assert mig.drop_rate < static.drop_rate
+
+
+# ---------------------------------------------------------------------------
+# state-transfer pricing
+# ---------------------------------------------------------------------------
+
+
+def test_migration_time_is_the_cost_engine_leg_arithmetic():
+    """Edge-to-edge state transfer = RPC envelope (2 latencies per leg +
+    wrapped call overhead) + serialize/deserialize + wire time per leg,
+    composed from the same primitives plans are priced with."""
+    topo = _star(num_edges=2)  # link_0: 2.0ms, link_1: 2.2ms, 117 MB/s
+    eng = CostEngine(topo)
+    n = tracker_state_nbytes()
+    w = topo.wrapper
+    expect = (
+        2 * w.call_overhead
+        + 2 * 2.0e-3 + 2 * 2.2e-3  # request+response latency, both legs
+        + 2 * (n / w.serialization_bandwidth)
+        + n / 117e6 + n / 117e6  # wire time on both legs
+    )
+    assert eng.migration_time(n, "edge_0", "edge_1") == pytest.approx(expect)
+    # home -> edge crosses one leg
+    one = (
+        2 * w.call_overhead + 2 * 2.0e-3
+        + 2 * (n / w.serialization_bandwidth) + n / 117e6
+    )
+    assert eng.migration_time(n, "hub", "edge_0") == pytest.approx(one)
+    # no-op and monotonicity
+    assert eng.migration_time(n, "edge_0", "edge_0") == 0.0
+    assert eng.migration_time(2 * n, "edge_0", "edge_1") > eng.migration_time(
+        n, "edge_0", "edge_1"
+    )
+    # unwrapped topologies pay no RPC envelope, but the transfer is
+    # still an explicit fetch: one propagation latency per leg plus
+    # serialization and wire — transfer_scalar's piggyback=False price
+    raw = Topology(
+        tiers=dict(topo.tiers), links=dict(topo.links), home=topo.home,
+        wrapper=topo.wrapper, wrapped=False,
+    )
+    raw_eng = CostEngine(raw)
+    got = raw_eng.migration_time(n, "edge_0", "edge_1")
+    assert got == pytest.approx(
+        2.0e-3 + 2.2e-3
+        + 2 * (n / w.serialization_bandwidth) + 2 * (n / 117e6)
+    )
+    assert got == pytest.approx(
+        raw_eng.transfer_scalar(n, "edge_0", "edge_1", piggyback=False)
+    )
+
+
+def test_migration_pricing_uses_current_link_conditions():
+    """A drifted link must charge its drifted latency to the transfer —
+    the controller prices against the live table, not the seed topo."""
+    comp = _comp()
+    topo = _star(num_edges=2, stagger=0.0)
+    servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+    ctl = _controller(MigrationConfig(), topo, comp, servers)
+    before = ctl.migration_time("edge_0", "edge_1")
+    ctl.link_table.set("link_0", latency=50e-3)
+    after = ctl.migration_time("edge_0", "edge_1")
+    assert after == pytest.approx(before + 2 * (50e-3 - 2e-3))
+
+
+def test_tracker_state_nbytes_and_config_validation():
+    # 27-dim pose (108 bytes / f32) + 64 particles x (pos, vel, pbest)
+    # + the swarm's global best
+    assert tracker_state_nbytes() == 4 * (27 + 64 * 3 * 27 + 27)
+    assert tracker_state_nbytes(num_particles=1, pose_dims=1) == 4 * (1 + 3 + 1)
+    with pytest.raises(ValueError):
+        MigrationConfig(min_dwell_frames=-1)
+    with pytest.raises(ValueError):
+        MigrationConfig(improvement_threshold=-0.1)
+    with pytest.raises(ValueError):
+        MigrationConfig(state_nbytes=-1)
+    with pytest.raises(ValueError):
+        MigrationConfig(target_policy="nope")
+    with pytest.raises(ValueError):
+        # blind rotation carries no load signal for live re-dispatch
+        MigrationConfig(target_policy="round_robin")
+    MigrationConfig(target_policy="least_queue")  # load-aware: accepted
