@@ -19,14 +19,30 @@ least-queue dispatch vs the same dispatch plus the live
 ``MigrationController`` — and CI-asserts that at the hotspot point
 migration strictly improves BOTH p99 frame latency (>= 10%) and drop
 rate (>= 40%), while staying within the hysteresis flap bound
-(<= MIG_MAX_MOVES_PER_CLIENT moves per client).
+(<= MIG_MAX_MOVES_PER_CLIENT moves per client).  Adding ``--grid``
+instead sweeps weak-factor x client-count and emits a JSON grid of
+where migration stops paying (state-transfer cost + residual imbalance
+vs the static fleet).
+
+``--codec`` measures the *payload-codec* capacity shift on the 5G star
+— the network-bound regime where PR 3's batching barely moved the knee
+(ROADMAP batching follow-up (d)).  The same batching-enabled 5G star
+is swept twice: raw payloads (every frame ships 537.6 kB, so the wire
+is the binding constraint) vs rate-controlled delta+quantize codec
+payloads (``repro.codec``), which strip the network floor and expose
+the service-bound regime fused batching absorbs.  CI asserts the
+25 fps capacity knee lands at >= 1.5x the raw client count, and that
+the *identity* codec reproduces the raw fleet event-for-event (the
+golden off-switch).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
-from repro.cluster import MigrationConfig, capacity_sweep
+from repro.cluster import MigrationConfig, capacity_sweep, run_fleet
+from repro.codec import CodecConfig, identity_config, sequence_motion
 from repro.core.offload import Policy
 from repro.net import links
 from repro.sim import hardware
@@ -41,6 +57,13 @@ MIG_GATE_CLIENTS = 9
 MIG_P99_MARGIN = 0.90  # migrating p99 must be <= 90% of static
 MIG_DROP_MARGIN = 0.60  # migrating drop rate must be <= 60% of static
 MIG_MAX_MOVES_PER_CLIENT = 3  # hysteresis flap bound
+
+# the codec gate: capacity knee with codec payloads vs raw payloads on
+# the batching 5G star (gather window sized so the raw arm holds the
+# bar at small counts — the raw loop is ~37.5 ms + window against the
+# 40 ms real-time budget)
+CODEC_MIN_KNEE_SHIFT = 1.5
+CODEC_GATHER_WINDOW = 1.25e-3
 
 
 def _sweep_rows(client_counts, num_frames) -> list:
@@ -184,6 +207,125 @@ def _assert_migration_gate(curves) -> None:
         )
 
 
+def _codec_rows(client_counts, num_frames, gather_window) -> tuple:
+    """Sweep the batching 5G star twice — raw vs rate-controlled codec
+    payloads — reporting per-point fps/drop/p99, mean uplink bytes per
+    frame and codec operating-point switches."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2, batching=True)
+    cfg = CodecConfig(base=hardware.codec_point(), motion=sequence_motion())
+    rows = []
+    knees = {}
+    for mode, codec in (("raw", None), ("codec", cfg)):
+        pts = capacity_sweep(
+            topo,
+            comp,
+            client_counts,
+            num_frames=num_frames,
+            policy=Policy.AUTO,
+            dispatch="batch_affinity",
+            gather_window=gather_window,
+            codec=codec,
+        )
+        knees[mode] = _knee(pts)
+        for p in pts:
+            r = p.result
+            rows.append((
+                f"fleet/{mode}_n{p.num_clients}",
+                r.mean_loop_time * 1e6,
+                f"fps={p.fps:.1f};drop={p.drop_rate:.3f};"
+                f"p99_ms={p.p99 * 1e3:.1f};"
+                f"up_kB={r.mean_uplink_bytes / 1e3:.1f};"
+                f"rate_changes={r.total_rate_changes}",
+            ))
+    return rows, knees
+
+
+def _assert_codec_identity_golden(gather_window) -> None:
+    """The off-switch contract, enforced in CI: a fleet armed with the
+    identity codec must reproduce the raw fleet event-for-event."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2, batching=True)
+    kwargs = dict(
+        num_frames=60,
+        policy=Policy.AUTO,
+        dispatch="batch_affinity",
+        gather_window=gather_window,
+        seed=0,
+    )
+    raw = run_fleet(topo, comp, 4, **kwargs)
+    ident = run_fleet(topo, comp, 4, codec=identity_config(), **kwargs)
+    for a, b in zip(raw.clients, ident.clients):
+        if (
+            a.stats.processed != b.stats.processed  # full FrameEvent streams
+            or a.stats.duration != b.stats.duration
+            or a.total_wait != b.total_wait
+            or a.plan.total_time != b.plan.total_time
+        ):
+            raise SystemExit(
+                f"identity codec diverged from the raw fleet on client "
+                f"{a.client} — the off-switch is no longer bit-for-bit"
+            )
+    if [e.admitted for e in raw.edges] != [e.admitted for e in ident.edges]:
+        raise SystemExit(
+            "identity codec changed per-edge admissions vs the raw fleet"
+        )
+    print("# identity codec == raw fleet, event for event (golden)")
+
+
+def _migration_grid(weak_factors, client_counts, num_frames) -> list:
+    """Weak-factor x client-count map of where migration pays: each
+    cell compares the static hotspot fleet against the migrating one
+    and records the p99/drop deltas, move count and mean state-transfer
+    latency.  ``pays`` = migration strictly improved p99 without
+    worsening drops."""
+    comp = hardware.paper_staged()
+    grid = []
+    for w in weak_factors:
+        topo = hardware.hotspot_star(
+            num_edges=3, edge_capacity=2, weak_factor=w
+        )
+        for mode, mig in (
+            ("static", None),
+            ("migrate", MigrationConfig(min_dwell_frames=10)),
+        ):
+            pts = capacity_sweep(
+                topo,
+                comp,
+                client_counts,
+                num_frames=num_frames,
+                policy=Policy.AUTO,
+                dispatch="least_queue",
+                migration=mig,
+            )
+            if mode == "static":
+                static = {p.num_clients: p for p in pts}
+            else:
+                for p in pts:
+                    s = static[p.num_clients]
+                    grid.append({
+                        "weak_factor": w,
+                        "clients": p.num_clients,
+                        "static_p99_ms": round(s.p99 * 1e3, 2),
+                        "migrate_p99_ms": round(p.p99 * 1e3, 2),
+                        "static_drop": round(s.drop_rate, 4),
+                        "migrate_drop": round(p.drop_rate, 4),
+                        "migrations": p.migrations,
+                        "mean_transfer_ms": round(
+                            p.mean_migration_latency * 1e3, 3
+                        ),
+                        # paying = strictly better on p99 or drops
+                        # without regressing the other (state-transfer
+                        # cost and residual imbalance already inside)
+                        "pays": bool(
+                            (p.p99 < s.p99 or p.drop_rate < s.drop_rate)
+                            and p.p99 <= s.p99
+                            and p.drop_rate <= s.drop_rate
+                        ),
+                    })
+    return grid
+
+
 def bench() -> list:
     return _sweep_rows((1, 2, 4, 8, 16, 32), num_frames=300)
 
@@ -208,13 +350,56 @@ def main() -> None:
         "and assert the p99/drop improvement and flap bound",
     )
     ap.add_argument(
+        "--codec",
+        action="store_true",
+        help="sweep raw vs codec payloads on the batching 5G star, "
+        "assert the 25 fps knee shifts >= 1.5x and the identity codec "
+        "is event-for-event the raw fleet",
+    )
+    ap.add_argument(
+        "--grid",
+        action="store_true",
+        help="with --migration: emit a weak-factor x client-count JSON "
+        "grid of where migration pays instead of the gate sweep",
+    )
+    ap.add_argument(
         "--gather-window",
         type=float,
-        default=2e-3,
-        help="batch gather window, seconds (batching mode)",
+        default=None,
+        help="batch gather window, seconds (default 2e-3 in batching "
+        "mode, 1.25e-3 in codec mode — the value the knee gate is "
+        "tuned at; overriding it can move the gate)",
     )
     args = ap.parse_args()
-    if args.migration:
+    if args.grid and not args.migration:
+        ap.error("--grid requires --migration")
+    if args.migration and args.grid:
+        # span both regimes: factors where the hotspot never saturates
+        # (migration cannot pay) through the PR 4 gate shape (it does)
+        grid = _migration_grid(
+            weak_factors=(1.0, 4.0, 8.0) if args.smoke else (1.0, 2.0, 4.0, 8.0),
+            client_counts=(6, MIG_GATE_CLIENTS) if args.smoke else (3, 6, MIG_GATE_CLIENTS, 12),
+            num_frames=120 if args.smoke else 300,
+        )
+        print(json.dumps(grid, indent=2))
+        return
+    if args.codec:
+        counts = (
+            (1, 2, 4, 6, 8, 12, 16)
+            if args.smoke
+            else (1, 2, 3, 4, 6, 8, 12, 16, 24)
+        )
+        codec_window = (
+            CODEC_GATHER_WINDOW
+            if args.gather_window is None
+            else args.gather_window
+        )
+        rows, knees = _codec_rows(
+            counts,
+            num_frames=60 if args.smoke else 300,
+            gather_window=codec_window,
+        )
+    elif args.migration:
         counts = (
             (3, 6, MIG_GATE_CLIENTS)
             if args.smoke
@@ -230,7 +415,9 @@ def main() -> None:
         rows, knees = _batching_rows(
             counts,
             num_frames=60 if args.smoke else 300,
-            gather_window=args.gather_window,
+            gather_window=(
+                2e-3 if args.gather_window is None else args.gather_window
+            ),
         )
     else:
         rows = (
@@ -239,7 +426,29 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
-    if args.migration:
+    if args.codec:
+        shift = (
+            knees["codec"] / knees["raw"] if knees["raw"] else float("inf")
+        )
+        print(
+            f"# capacity knee @ {KNEE_FPS:.0f} fps: "
+            f"raw={knees['raw']} clients, "
+            f"codec={knees['codec']} clients ({shift:.2f}x)"
+        )
+        if not knees["raw"]:
+            # shift would be inf — a vacuous pass; the raw arm falling
+            # below real time everywhere means the star regressed
+            raise SystemExit(
+                f"raw capacity knee is 0 (no swept client count held "
+                f"{KNEE_FPS:.0f} fps) — the codec shift gate is vacuous"
+            )
+        if shift < CODEC_MIN_KNEE_SHIFT:
+            raise SystemExit(
+                f"codec capacity knee only {shift:.2f}x the raw one "
+                f"(expected >= {CODEC_MIN_KNEE_SHIFT}x)"
+            )
+        _assert_codec_identity_golden(codec_window)
+    elif args.migration:
         _assert_migration_gate(curves)
     elif args.batching:
         shift = (

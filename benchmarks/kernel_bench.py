@@ -79,4 +79,35 @@ def bench() -> list:
         f"particle_dims_per_s={b * np_ * d / t_fused:.2e};"
         f"per_client_vs_solo={t_fused / (b * t_upd):.2f};interpret=True",
     ))
+
+    # payload codec: delta-encode + quantize-pack one depth plane (the
+    # uplink's per-frame encode work) and its exact wire footprint
+    from repro.codec import kernels as ckern, ref as cref
+
+    h, w = 240, 320
+    prev = objective.render_depth(hs[0], Camera()).reshape(128, 128)
+    frame = jnp.pad(prev + 0.001, ((0, h - 128), (0, w - 128)))
+    prev = jnp.pad(prev, ((0, h - 128), (0, w - 128)))
+    raw_bytes = frame.size * 4
+    t_delta = time_fn(
+        jax.jit(lambda f, r: ckern.delta_encode(f, r)[0]), frame, prev
+    )
+    _, mask = ckern.delta_encode(frame, prev)
+    # the f32 XOR path ships 32-bit residuals (lossless); the quantized
+    # wire width is priced by the model/ref.encode_frame, not here
+    enc_bytes = cref.encoded_nbytes_exact(mask, bits=32, header_nbytes=64)
+    rows.append((
+        "kernel/codec_delta_encode_pallas_interpret",
+        t_delta * 1e6,
+        f"bytes_per_s={raw_bytes / t_delta:.2e};"
+        f"wire_ratio={enc_bytes / raw_bytes:.3f};interpret=True",
+    ))
+    t_q = time_fn(
+        jax.jit(lambda f: ckern.quantize_pack(f, 0.0, 2.0, bits=8)), frame
+    )
+    rows.append((
+        "kernel/codec_quantize_pack_pallas_interpret",
+        t_q * 1e6,
+        f"bytes_per_s={raw_bytes / t_q:.2e};pack_ratio=0.25;interpret=True",
+    ))
     return rows

@@ -24,6 +24,7 @@ from repro.cluster.fleet import (  # noqa: F401
     ClientResult,
     FleetResult,
     LinkDrift,
+    ServiceDrift,
     SweepPoint,
     capacity_sweep,
     run_fleet,

@@ -85,6 +85,7 @@ class DispatchContext:
     link_table: LinkTable
     assignments: Dict[str, int]  # edge -> clients currently assigned
     now: float = 0.0
+    codec: object = None  # CodecModel the fleet's clients ship under
 
 
 class RoundRobinDispatch:
@@ -123,6 +124,7 @@ class LatencyWeightedDispatch:
                 sub,
                 ctx.policy,
                 occupancy={edge: ctx.assignments.get(edge, 0)},
+                codec=ctx.codec,
             )
             return rep.total_time
 

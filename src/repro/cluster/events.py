@@ -95,6 +95,12 @@ class SlotServer:
         self.total_wait = 0.0
         self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
+        # live service-time multiplier (thermal throttling injected by
+        # fleet.ServiceDrift); 1.0 multiplies bit-exactly, so the
+        # undrifted server is unchanged.  Plans never see this — only
+        # measured waits do, which is what the migration controller's
+        # wait-EWMA calibration exists to track.
+        self.service_scale = 1.0
 
     def load(self, now: float) -> int:
         """Requests admitted but not yet finished at ``now``."""
@@ -110,6 +116,7 @@ class SlotServer:
                 f"({arrival} < {self._last_admit})"
             )
         self._last_admit = arrival
+        service = service * self.service_scale
         free = heapq.heappop(self._slots)
         start = max(arrival, free)
         finish = start + service
@@ -195,6 +202,7 @@ class BatchingSlotServer:
         self.total_wait = 0.0
         self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
+        self.service_scale = 1.0  # same live throttle hook as SlotServer
 
     def load(self, now: float) -> int:
         """Requests admitted but not yet finished at ``now`` (both the
@@ -228,6 +236,10 @@ class BatchingSlotServer:
             )
         self._last_admit = arrival
         self.admitted += 1
+        # the throttle applies per ADMISSION (same semantics as
+        # SlotServer): an item submitted before a ServiceDrift keeps
+        # its nominal time even if its batch closes after the drift
+        service = service * self.service_scale
         if self.gather_window <= 0.0:
             self._serve(arrival, [(arrival, service, done)])
         else:
@@ -246,6 +258,8 @@ class BatchingSlotServer:
     def _serve(
         self, ready: float, items: List[Tuple[float, float, Callable]]
     ) -> None:
+        # member times were scaled at submit; the fused launch prices
+        # them as-is (scale 1.0 is a bit-exact no-op throughout)
         batch_t = self.model.batch_time([svc for _, svc, _ in items])
         free = heapq.heappop(self._slots)
         start = max(ready, free)

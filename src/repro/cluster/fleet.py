@@ -41,7 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -66,6 +66,7 @@ from repro.cluster.plancache import (
     PlanCache,
     topology_fingerprint,
 )
+from repro.codec.rate import CodecConfig, RateController
 from repro.core.costengine import BatchServiceModel, PlanReport
 from repro.core.offload import Policy, Topology
 from repro.core.stages import StagedComputation
@@ -90,6 +91,23 @@ class LinkDrift:
     bandwidth: Optional[float] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class ServiceDrift:
+    """Inject a *service-side* slowdown on one edge at a simulated time
+    (thermal throttling, a noisy co-tenant): every service admitted
+    from ``time`` on runs ``factor`` times longer.
+
+    Plans cannot see this — their compute terms price the tier's
+    nominal rate — and neither can the link drift detector (nothing
+    crossed the wire differently).  The inflation lands entirely in
+    *measured waits*, which is exactly the signal the migration
+    controller's ``wait_ewma_blend`` calibration tracks."""
+
+    time: float
+    edge: str
+    factor: float
+
+
 @dataclasses.dataclass
 class ClientResult:
     client: int
@@ -102,6 +120,8 @@ class ClientResult:
     # (EdgeLoad.mean_wait counts only the pre-service part)
     total_wait: float
     migrations: int = 0  # mid-run re-dispatches this client made
+    rate_changes: int = 0  # codec operating-point switches this client made
+    codec: Optional[object] = None  # final CodecModel (None = raw payloads)
 
     @property
     def mean_wait(self) -> float:
@@ -161,6 +181,18 @@ class FleetResult:
     def total_migrations(self) -> int:
         return self.migration.count if self.migration is not None else 0
 
+    @property
+    def total_rate_changes(self) -> int:
+        return sum(c.rate_changes for c in self.clients)
+
+    @property
+    def mean_uplink_bytes(self) -> float:
+        """Mean per-frame uplink payload across clients' final plans —
+        the codec's wire-side footprint (raw frame bytes when off)."""
+        if not self.clients:
+            return 0.0
+        return sum(c.plan.uplink_bytes for c in self.clients) / len(self.clients)
+
     def _loop_times(self) -> List[float]:
         return [
             ev.finish - ev.start
@@ -181,7 +213,14 @@ class _Client:
     exact drop/supersede arithmetic against the shared event clock."""
 
     def __init__(
-        self, idx: int, rng, edge: str, plan: PlanReport, home: str, plan_fp
+        self,
+        idx: int,
+        rng,
+        edge: str,
+        plan: PlanReport,
+        home: str,
+        plan_fp,
+        rate: Optional[RateController] = None,
     ):
         self.idx = idx
         self.rng = rng
@@ -196,9 +235,16 @@ class _Client:
         self.migrations = 0
         self.total_wait = 0.0
         self.drifted = False
+        self.rate = rate  # per-client codec rate controller (or None)
+        self.rate_dirty = False  # operating point changed: re-plan next frame
         self.frames_since_probe = 0
         # in-flight frame: (index, arrival, start, sampled_total, observed)
         self.pending: Optional[Tuple[int, float, float, float, tuple]] = None
+
+    @property
+    def codec_model(self):
+        """The CodecModel this client's plans are priced under."""
+        return self.rate.model if self.rate is not None else None
 
     def set_plan(self, plan: PlanReport, plan_fp) -> None:
         self.plan = plan
@@ -221,7 +267,7 @@ def run_fleet(
     seed: int = 0,
     camera_fps: float = CAMERA_FPS,
     cache: Optional[PlanCache] = None,
-    drifts: Sequence[LinkDrift] = (),
+    drifts: Sequence[Union[LinkDrift, ServiceDrift]] = (),
     drift_threshold: float = 0.5,
     drift_window: int = 16,
     drift_min_samples: int = 8,
@@ -229,6 +275,7 @@ def run_fleet(
     batching: Optional[bool] = None,
     gather_window: float = 2e-3,
     migration: Optional[MigrationConfig] = None,
+    codec: Optional[CodecConfig] = None,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -265,6 +312,19 @@ def run_fleet(
     pose + swarm state transfer before its next frame starts, and
     re-plans against the new edge through the shared plan cache.
     ``migration=None`` (default) is bit-for-bit the static fleet.
+
+    Codec: passing a :class:`~repro.codec.rate.CodecConfig` arms a
+    per-client :class:`~repro.codec.rate.RateController` — every plan
+    is priced under the client's current codec operating point
+    (compressed payload bytes, encode/decode compute at the endpoints;
+    the CodecModel is part of the plan-cache key, so clients at the
+    same point share one plan), and at every frame finish the
+    controller feeds observed link pressure and scene motion to the
+    rate loop; an operating-point switch re-plans the client before
+    its next frame (``ClientResult.rate_changes``).  ``codec=None``
+    (default) ships raw payloads; the identity codec
+    (``codec.rate.identity_config()``) is the golden off-switch —
+    event-for-event the raw fleet.
     """
     if num_clients < 1:
         raise ValueError("need at least one client")
@@ -327,6 +387,9 @@ def run_fleet(
     )
     period = 1.0 / camera_fps
 
+    # every client's rate controller starts at the same deterministic
+    # operating point, so admission-time dispatch prices with it too
+    init_codec = RateController(codec).model if codec is not None else None
     ctx = DispatchContext(
         topo=topo,
         comp=comp_used,
@@ -335,6 +398,7 @@ def run_fleet(
         servers=servers,
         link_table=link_table,
         assignments={},
+        codec=init_codec,
     )
     disp = make_dispatch(dispatch)
     clients: List[_Client] = []
@@ -342,7 +406,14 @@ def run_fleet(
         edge = disp.assign(c, ctx)
         ctx.assignments[edge] = ctx.assignments.get(edge, 0) + 1
         sub = edge_subtopology(topo, edge, link_table)
-        plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
+        rate = RateController(codec) if codec is not None else None
+        plan, _ = cache.get_or_plan(
+            comp_used,
+            sub,
+            policy,
+            planner,
+            codec=rate.model if rate is not None else None,
+        )
         clients.append(
             _Client(
                 c,
@@ -351,6 +422,7 @@ def run_fleet(
                 plan,
                 topo.home,
                 topology_fingerprint(sub),
+                rate=rate,
             )
         )
 
@@ -367,18 +439,23 @@ def run_fleet(
             servers=servers,
             edges=edges,
             assignments=ctx.assignments,
+            codec=init_codec,
         )
 
     # --- event handlers ---------------------------------------------------
 
     def replan(client: _Client, edge: str) -> None:
         """Re-plan ``client`` against ``edge`` under current link
-        conditions and reset its adaptive-loop state (shared by the
-        drift-replan and migration paths so they cannot diverge)."""
+        conditions AND its current codec operating point, resetting its
+        adaptive-loop state (shared by the drift-replan, rate-switch
+        and migration paths so they cannot diverge)."""
         sub = edge_subtopology(topo, edge, link_table)
-        plan, _ = cache.get_or_plan(comp_used, sub, policy, planner)
+        plan, _ = cache.get_or_plan(
+            comp_used, sub, policy, planner, codec=client.codec_model
+        )
         client.set_plan(plan, topology_fingerprint(sub))
         client.drifted = False
+        client.rate_dirty = False
         client.frames_since_probe = 0
         detector.reset(client.idx)
 
@@ -386,9 +463,10 @@ def run_fleet(
         i = client.next_i
         if i >= num_frames:
             return
-        if client.drifted:
+        if client.drifted or client.rate_dirty:
+            if client.drifted:
+                client.replans += 1
             replan(client, client.edge)
-            client.replans += 1
         arrival = i * period
         start = max(arrival, client.t_free)
         newest = min(int(start / period), num_frames - 1)
@@ -466,6 +544,17 @@ def run_fleet(
                 sub = edge_subtopology(topo, client.edge, link_table)
                 if topology_fingerprint(sub) != client.plan_fp:
                     client.drifted = True
+        if client.rate is not None:
+            # feed the rate loop this frame's observed leg draws and
+            # motion index; a switch re-plans (same codec-keyed cache)
+            # before the next frame starts.  The controller's own
+            # `switches` counter is the single source of truth.
+            if client.rate.observe(i, observed, client.plan) is not None:
+                client.rate_dirty = True
+        if controller is not None and client.visits:
+            # report the measured non-plan time to the predictor's
+            # per-edge wait EWMA (read only when wait_ewma_blend > 0)
+            controller.observe_wait(client.edge, wait, q.now)
         if controller is not None and client.next_i < num_frames:
             # the just-finished frame IS the drain: re-dispatch decisions
             # land only at frame boundaries, never with a frame in flight
@@ -482,6 +571,7 @@ def run_fleet(
                     client.visits[0][0] if client.visits else topo.home
                 ),
                 force=client.drifted,
+                codec=client.codec_model,
             )
             if move is not None:
                 target, mig_latency = move
@@ -497,12 +587,20 @@ def run_fleet(
     for client in clients:
         q.schedule(0.0, lambda c=client: start_frame(c))
     for d in drifts:
-        q.schedule(
-            d.time,
-            lambda d=d: link_table.set(
-                d.link, latency=d.latency, jitter=d.jitter, bandwidth=d.bandwidth
-            ),
-        )
+        if isinstance(d, ServiceDrift):
+            if d.edge not in servers:
+                raise ValueError(f"ServiceDrift targets unknown edge {d.edge!r}")
+            q.schedule(
+                d.time,
+                lambda d=d: setattr(servers[d.edge], "service_scale", d.factor),
+            )
+        else:
+            q.schedule(
+                d.time,
+                lambda d=d: link_table.set(
+                    d.link, latency=d.latency, jitter=d.jitter, bandwidth=d.bandwidth
+                ),
+            )
     q.run()
 
     client_results = []
@@ -517,6 +615,10 @@ def run_fleet(
                 replans=client.replans,
                 total_wait=client.total_wait,
                 migrations=client.migrations,
+                rate_changes=(
+                    client.rate.switches if client.rate is not None else 0
+                ),
+                codec=client.codec_model,
             )
         )
     edge_loads = [

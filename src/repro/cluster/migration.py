@@ -107,13 +107,31 @@ class MigrationConfig:
     batch affinity + per-edge plan cost), or a load-aware
     ``dispatch.DISPATCH_POLICIES`` name to run that policy live
     (``round_robin`` is rejected: its blind rotation is meaningless as
-    a re-dispatch target).
+    a re-dispatch target).  ``wait_ewma_blend`` / ``wait_ewma_alpha`` —
+    predictor calibration against *measured* per-edge waits (see
+    :meth:`MigrationController.observe_wait`); the default blend of 0
+    is the exact historical model-only predictor.
     """
 
     min_dwell_frames: int = 30
     improvement_threshold: float = 0.15
     state_nbytes: int = DEFAULT_STATE_NBYTES
     target_policy: str = "predicted"
+    # predictor calibration: blend a per-edge EWMA of *measured* frame
+    # waits into the occupancy term.  Plan totals + live queue depth
+    # cannot see an edge whose service times drifted (thermal
+    # throttling: the same queue drains slower) — measured waits can.
+    # ``wait_ewma_blend`` is the measured share (0 = pure model, the
+    # exact historical predictor; 1 = pure measurement);
+    # ``wait_ewma_alpha`` the EWMA smoothing of each new wait sample.
+    wait_ewma_blend: float = 0.0
+    wait_ewma_alpha: float = 0.25
+    # measured evidence ages: the blend weight halves every this many
+    # simulated seconds since an edge's last wait sample, so a stale
+    # measurement (e.g. an evacuated edge whose throttle may have
+    # ended) gradually hands the prediction back to the model instead
+    # of repelling clients forever.  inf freezes evidence (no decay).
+    wait_ewma_half_life: float = 3.0
 
     def __post_init__(self) -> None:
         if self.min_dwell_frames < 0:
@@ -122,6 +140,12 @@ class MigrationConfig:
             raise ValueError("improvement_threshold must be >= 0")
         if self.state_nbytes < 0:
             raise ValueError("state_nbytes must be >= 0")
+        if not 0.0 <= self.wait_ewma_blend <= 1.0:
+            raise ValueError("wait_ewma_blend must be in [0, 1]")
+        if not 0.0 < self.wait_ewma_alpha <= 1.0:
+            raise ValueError("wait_ewma_alpha must be in (0, 1]")
+        if self.wait_ewma_half_life <= 0.0:
+            raise ValueError("wait_ewma_half_life must be > 0")
         # round_robin's stateful rotation carries no load/latency signal:
         # as a live re-dispatch target it proposes edges blindly in cycle
         valid = {"predicted"} | (set(DISPATCH_POLICIES) - {"round_robin"})
@@ -198,6 +222,7 @@ class MigrationController:
         link_table: Optional[LinkTable] = None,
         edges: Optional[List[str]] = None,
         assignments: Optional[Dict[str, int]] = None,
+        codec=None,
     ):
         self.config = config
         self.topo = topo
@@ -217,6 +242,10 @@ class MigrationController:
         )
         self.home = topo.home
         self.key = comp.name
+        # the CodecModel candidate plans are priced under (the fleet
+        # passes each client's live operating point per `consider`; this
+        # is the fleet-level default for direct use)
+        self.codec = codec
         self._disp = (
             None
             if config.target_policy == "predicted"
@@ -232,6 +261,11 @@ class MigrationController:
             assignments=self.assignments,
         )
         self._dwell: Dict[int, int] = {}
+        # per-edge (EWMA, last-sample time) of measured per-frame waits
+        # (queue + gather dwell + batch/throttle service inflation) —
+        # the calibration signal `wait_ewma_blend` mixes into the
+        # occupancy term, down-weighted as the evidence ages
+        self._wait_ewma: Dict[str, Tuple[float, float]] = {}
         # scoring memo: (edge, current Link value) -> (plan, remote
         # service).  Post-dwell the controller scores every edge at
         # every frame finish; the inputs only change when a link drifts
@@ -255,10 +289,33 @@ class MigrationController:
     def dwell(self, client: int) -> int:
         return self._dwell.get(client, 0)
 
+    # -- measured-wait calibration -------------------------------------------
+
+    def observe_wait(self, edge: str, wait: float, now: float = 0.0) -> None:
+        """Feed one processed frame's measured non-plan time on
+        ``edge`` (the fleet reports every frame finish).  Maintains the
+        per-edge EWMA that ``wait_ewma_blend`` mixes into the
+        predictor; with the blend at 0 the samples are recorded but
+        never read, so the default predictor is bit-for-bit unchanged."""
+        a = self.config.wait_ewma_alpha
+        prev = self._wait_ewma.get(edge)
+        self._wait_ewma[edge] = (
+            wait if prev is None else a * wait + (1.0 - a) * prev[0],
+            now,
+        )
+
+    def wait_ewma(self, edge: str) -> float:
+        entry = self._wait_ewma.get(edge)
+        return entry[0] if entry is not None else 0.0
+
     # -- prediction ---------------------------------------------------------
 
     def predicted_frame_time(
-        self, edge: str, now: float, current: Optional[str] = None
+        self,
+        edge: str,
+        now: float,
+        current: Optional[str] = None,
+        codec=None,
     ) -> float:
         """What one frame would cost a client placed on ``edge`` now.
 
@@ -274,16 +331,29 @@ class MigrationController:
         of occ+1 items (the cost engine's model), and an edge gathering
         a compatible open batch earns a strict credit — joining it
         skips part of the gather-window dwell a fresh batch would pay —
-        which is what steers migrating clients into forming batches."""
+        which is what steers migrating clients into forming batches.
+
+        ``codec`` prices candidate plans at the asking client's codec
+        operating point (compressed payloads change which edge wins on
+        asymmetric links).  With ``wait_ewma_blend > 0`` the occupancy
+        excess is blended with the edge's measured-wait EWMA — the
+        calibration that catches *service-side* drift (a throttled edge
+        serves the same queue slower; plan totals and queue depth alone
+        mispredict it, tested in tests/test_migration.py)."""
         link = self.link_table.get(
             self.topo.link_between(self.topo.home, edge).name
         )
-        memo_key = (edge, link)
+        memo_key = (edge, link, codec)
         cached = self._scores.get(memo_key)
         if cached is None:
             sub = edge_subtopology(self.topo, edge, self.link_table)
             plan, _ = self.cache.get_or_plan(
-                self.comp, sub, self.policy, self.planner, record_stats=False
+                self.comp,
+                sub,
+                self.policy,
+                self.planner,
+                record_stats=False,
+                codec=codec,
             )
             service = sum(
                 t for tier, t in plan.compute_by_tier if tier != self.home
@@ -297,6 +367,7 @@ class MigrationController:
             others = self.assignments.get(edge, 0) - (1 if edge == current else 0)
             occ = max(others, srv.load(now), 0)
             model = self._batch_models.get(edge)
+            credit = 0.0
             if model is not None:
                 # co-assigned clients ride the same fused launch: price
                 # occupancy as the cost engine does — the batch time of
@@ -307,23 +378,43 @@ class MigrationController:
                 # processor-sharing branch below has no such gap: its
                 # inflation factor is linear, so stage-wise and summed
                 # inflation agree exactly)
-                t += model.batch_time([service] * (occ + 1)) - service
+                excess = model.batch_time([service] * (occ + 1)) - service
                 if srv.open_batch_size(self.key) > 0:
                     # a compatible batch is gathering RIGHT NOW: joining
                     # it skips ~half the gather-window dwell a fresh
                     # batch would pay — a small strict credit that
                     # breaks equal-load ties toward forming batches
-                    t -= 0.5 * getattr(srv, "gather_window", 0.0)
+                    credit = 0.5 * getattr(srv, "gather_window", 0.0)
             else:
                 # contention_factor semantics: occ+1 requests, cap slots
-                t += service * max(0.0, (occ + 1) / cap - 1.0)
+                excess = service * max(0.0, (occ + 1) / cap - 1.0)
+            blend = self.config.wait_ewma_blend
+            measured = self._wait_ewma.get(edge)
+            if blend > 0.0 and measured is not None:
+                # the model term and the measured EWMA estimate the SAME
+                # quantity (per-frame non-plan time); the blend decides
+                # whose evidence to trust, down-weighted by the sample's
+                # age so an edge nobody visits anymore (e.g. evacuated
+                # after a throttle) hands the prediction back to the
+                # model instead of repelling clients forever.  Guarded
+                # so blend == 0 keeps the exact historical arithmetic.
+                value, t_obs = measured
+                age = max(0.0, now - t_obs)
+                w = blend * 0.5 ** (age / self.config.wait_ewma_half_life)
+                excess = (1.0 - w) * excess + w * value
+            t += excess
+            t -= credit
         return t
 
     # -- state-transfer pricing ---------------------------------------------
 
-    def migration_time(self, state_src: str, dst: str) -> float:
+    def migration_time(
+        self, state_src: str, dst: str, codec=None
+    ) -> float:
         """Price the pose + swarm transfer over *current* link
-        conditions (drifted links charge their drifted latency)."""
+        conditions (drifted links charge their drifted latency).  With
+        a codec the state ships at the engine's keyframe pricing — the
+        destination has no reference to delta against."""
         live = Topology(
             tiers=dict(self.topo.tiers),
             links={
@@ -334,9 +425,10 @@ class MigrationController:
             wrapper=self.topo.wrapper,
             wrapped=self.topo.wrapped,
         )
-        return CostEngine(live).migration_time(
-            self.config.state_nbytes, state_src, dst
+        engine = CostEngine(
+            live, codec=codec if codec is not None else self.codec
         )
+        return engine.migration_time(self.config.state_nbytes, state_src, dst)
 
     # -- the decision -------------------------------------------------------
 
@@ -347,6 +439,7 @@ class MigrationController:
         now: float,
         state_src: Optional[str] = None,
         force: bool = False,
+        codec=None,
     ) -> Optional[Tuple[str, float]]:
         """Should ``client`` move off ``current``?  Returns ``(target,
         state_transfer_latency)`` and records the migration, or None.
@@ -354,14 +447,22 @@ class MigrationController:
         ``force=True`` (link drift) waives the dwell gate — the link
         changed under the client, so its placement is stale evidence —
         but never the improvement threshold: hysteresis still decides.
+        ``codec`` is the asking client's live operating point: candidate
+        plans and the state transfer are priced under it (None falls
+        back to the controller's fleet-level default).
         """
+        if codec is None:
+            codec = self.codec
         if not force and self._dwell.get(client, 0) < self.config.min_dwell_frames:
             return None
         self.stats.considered += 1
         if self._disp is not None:
             # run the configured dispatch policy live; the mover itself
-            # must not count against its own current edge
+            # must not count against its own current edge, and the
+            # policy must price candidates under the SAME codec the
+            # hysteresis check uses (latency_weighted plans through it)
             self._ctx.now = now
+            self._ctx.codec = codec
             orig = self.assignments.get(current, 0)
             self.assignments[current] = max(0, orig - 1)
             try:
@@ -370,11 +471,11 @@ class MigrationController:
                 self.assignments[current] = orig
             if target == current:
                 return None
-            cur_t = self.predicted_frame_time(current, now, current)
-            new_t = self.predicted_frame_time(target, now, current)
+            cur_t = self.predicted_frame_time(current, now, current, codec)
+            new_t = self.predicted_frame_time(target, now, current, codec)
         else:
             times = {
-                e: self.predicted_frame_time(e, now, current)
+                e: self.predicted_frame_time(e, now, current, codec)
                 for e in self.edges
             }
             target = min(self.edges, key=lambda e: (times[e], e))
@@ -386,7 +487,7 @@ class MigrationController:
         if not new_t < cur_t * (1.0 - self.config.improvement_threshold):
             return None
         src = state_src if state_src is not None else self.home
-        latency = self.migration_time(src, target)
+        latency = self.migration_time(src, target, codec)
         self.stats.records.append(
             MigrationRecord(
                 client=client,

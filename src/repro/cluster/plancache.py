@@ -117,12 +117,18 @@ class PlanCache:
         topo: Topology,
         policy: Policy,
         planner: Optional[str] = None,
+        codec=None,
     ) -> Tuple:
+        # the codec operating point is part of a plan's identity: a
+        # frozen flat-field CodecModel hashes directly, so clients at
+        # the same point share one plan and a rate-controller switch is
+        # a miss by construction
         return (
             comp_signature(comp),
             topology_fingerprint(topo),
             policy.value,
             planner,
+            codec,
         )
 
     def get_or_plan(
@@ -132,6 +138,7 @@ class PlanCache:
         policy: Policy = Policy.AUTO,
         planner: Optional[str] = None,
         record_stats: bool = True,
+        codec=None,
     ) -> Tuple[PlanReport, bool]:
         """Returns (report, was_hit).  A hit is the stored object itself.
 
@@ -140,13 +147,13 @@ class PlanCache:
         every candidate edge once per considered frame, and counting
         those probes would drown the hit-rate signal that measures
         actual per-client planning work."""
-        key = self.key(comp, topo, policy, planner)
+        key = self.key(comp, topo, policy, planner, codec)
         cached = self._plans.get(key)
         if cached is not None:
             if record_stats:
                 self.stats.hits += 1
             return cached, True
-        rep = offload.plan(comp, topo, policy, planner=planner)
+        rep = offload.plan(comp, topo, policy, planner=planner, codec=codec)
         self._plans[key] = rep
         if record_stats:
             self.stats.misses += 1

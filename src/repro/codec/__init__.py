@@ -1,0 +1,31 @@
+"""Payload codec: delta-frame RGBD compression for the offload loop.
+
+The paper names "compressing the information flow" as the improvement
+that matters once compute is offloaded — the RGBD frame crossing the
+network dominates the loop.  This package spans the whole stack:
+
+* ``codec.kernels`` — Pallas kernels (temporal delta with per-tile
+  change masks, uniform depth quantization + bit-packing, batched
+  variants sharing the fused-edge tile idiom);
+* ``codec.ref`` — pure-jnp oracles and exact wire-format accounting;
+* ``codec.model`` — the analytic :class:`~repro.codec.model.CodecModel`
+  the cost engine prices transfer legs with (:data:`IDENTITY` is the
+  bit-for-bit off-switch);
+* ``codec.rate`` — per-client rate control in the fleet simulator
+  (keyframe interval from scene motion, quantizer bits from link
+  pressure, re-planning through the shared plan cache).
+"""
+
+from repro.codec.model import (  # noqa: F401
+    BITS_RAW,
+    CodecModel,
+    IDENTITY,
+)
+from repro.codec.rate import (  # noqa: F401
+    CodecConfig,
+    RateController,
+    calibrate_density_map,
+    identity_config,
+    motion_profile,
+    sequence_motion,
+)

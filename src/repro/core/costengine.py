@@ -34,6 +34,19 @@ Cost semantics (unchanged from the calibrated two-tier model):
              ride the final response home (no extra latency).  Item
              residency is tracked so a frame uploaded once is not
              re-sent.
+  codec    : with a ``repro.codec.CodecModel`` armed, every payload the
+             codec *applies to* (frame-sized items at a compressing
+             operating point) ships its compressed byte estimate —
+             serialization, wire time and uplink/downlink accounting
+             all see codec-aware bytes — plus encode compute at the
+             payload's source tier and decode compute at its
+             destination (charged into ``compute_by_tier``, so a
+             contended edge's decode work occupies its service slots in
+             the fleet simulator; codec compute itself is not
+             contention-inflated — it is microseconds against
+             millisecond stages).  The identity codec never applies, so
+             ``codec=None`` and the identity codec are bit-for-bit the
+             same arithmetic.
 """
 
 from __future__ import annotations
@@ -252,9 +265,13 @@ class CostEngine:
         self,
         topology: Topology,
         occupancy: Optional[Dict[str, int]] = None,
+        codec=None,
     ):
         self.topology = topology
         self.occupancy: Dict[str, int] = dict(occupancy) if occupancy else {}
+        # a repro.codec.CodecModel (or None): payload compression priced
+        # into every transfer leg — see the module docstring
+        self.codec = codec
 
     # -- small shared pieces ------------------------------------------------
 
@@ -303,6 +320,19 @@ class CostEngine:
         the home->dst path; anything else is an explicit fetch."""
         return src in self.topology.path_tiers(self.topology.home, dst)
 
+    def _codec_terms(self, nbytes: int, src: str, dst: str):
+        """``(wire_nbytes, encode_t, decode_t)`` of one payload transfer
+        under the armed codec — ``(nbytes, 0.0, 0.0)`` with no codec or
+        when it does not apply (tiny payloads, identity codec)."""
+        codec = self.codec
+        if codec is None or not codec.applies(nbytes):
+            return nbytes, 0.0, 0.0
+        return (
+            codec.wire_nbytes(nbytes),
+            codec.encode_time(nbytes, self.topology.tier(src)),
+            codec.decode_time(nbytes, self.topology.tier(dst)),
+        )
+
     # -- scalar costs (used by planners; same arithmetic as evaluate) -------
 
     def envelope_scalar(self, tier_name: str) -> float:
@@ -323,6 +353,21 @@ class CostEngine:
             return nbytes / topo.wrapper.jni_bandwidth
         return 0.0
 
+    def _wire_scalar(
+        self, wire_nbytes: int, src: str, dst: str, piggy: bool
+    ) -> float:
+        """Latency/serialization/wire arithmetic on ALREADY-encoded
+        bytes (codec-free; shared by transfer and migration pricing)."""
+        topo = self.topology
+        links = topo.path_links(src, dst)
+        t = 0.0
+        if not piggy:
+            for link in links:
+                t += link.latency
+        t += serialization_time(wire_nbytes, topo.wrapper)
+        t += wire_time(wire_nbytes, links)
+        return t
+
     def transfer_scalar(
         self,
         nbytes: int,
@@ -330,15 +375,13 @@ class CostEngine:
         dst: str,
         piggyback: Optional[bool] = None,
     ) -> float:
-        topo = self.topology
-        links = topo.path_links(src, dst)
         piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
-        t = 0.0
-        if not piggy:
-            for link in links:
-                t += link.latency
-        t += serialization_time(nbytes, topo.wrapper)
-        t += wire_time(nbytes, links)
+        wire_n, enc_t, dec_t = self._codec_terms(nbytes, src, dst)
+        t = self._wire_scalar(wire_n, src, dst, piggy)
+        if enc_t > 0.0 or dec_t > 0.0:
+            # codec compute rides the transfer total so planners pricing
+            # DP transitions with this scalar agree with `evaluate`
+            t += enc_t + dec_t
         return t
 
     def migration_time(self, nbytes: int, src: str, dst: str) -> float:
@@ -352,11 +395,22 @@ class CostEngine:
         wrapped stack, the RPC envelope of the transfer call itself
         (proxy/skeleton overhead and the response leg's latency).
         ``src == dst`` is a no-op (state already there).
+
+        With a codec armed the state ships at *keyframe* pricing
+        (quantizer only): the destination holds no reference frame to
+        delta against, so the amortized delta ratio would overpromise.
         """
         if src == dst:
             return 0.0
         topo = self.topology
-        t = self.transfer_scalar(nbytes, src, dst, piggyback=False)
+        codec = self.codec
+        if codec is not None and codec.state_applies(nbytes):
+            wire_n = codec.state_wire_nbytes(nbytes)
+            t = self._wire_scalar(wire_n, src, dst, piggy=False)
+            t += codec.state_encode_time(nbytes, topo.tier(src))
+            t += codec.state_decode_time(nbytes, topo.tier(dst))
+        else:
+            t = self._wire_scalar(nbytes, src, dst, piggy=False)
         if topo.wrapped:
             t += 2 * topo.wrapper.call_overhead
             for link in topo.path_links(src, dst):
@@ -399,16 +453,25 @@ class CostEngine:
         compute_by_tier: Dict[str, float] = {}  # insertion = first-visit order
 
         def _ship(nbytes: int, src: str, dst: str, piggyback: Optional[bool]) -> None:
-            """Payload cost: fetch legs + serialize/deserialize + wire."""
-            nonlocal wrapper_t, network_t, up_bytes, down_bytes
+            """Payload cost: codec encode/decode (when armed) + fetch
+            legs + serialize/deserialize + wire, all on codec-aware
+            bytes."""
+            nonlocal compute_t, wrapper_t, network_t, up_bytes, down_bytes
             links = topo.path_links(src, dst)
             piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
+            wire_n, enc_t, dec_t = self._codec_terms(nbytes, src, dst)
+            if enc_t > 0.0:  # encode where the payload lives...
+                compute_t += enc_t
+                compute_by_tier[src] = compute_by_tier.get(src, 0.0) + enc_t
+            if dec_t > 0.0:  # ...decode where it lands (slot work there)
+                compute_t += dec_t
+                compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + dec_t
             if not piggy:
                 for link in links:
                     network_t += link.latency
                     legs.append(LatencyLeg(link.name, link.latency, link.jitter))
-            wrapper_t += serialization_time(nbytes, topo.wrapper)
-            network_t += wire_time(nbytes, links)
+            wrapper_t += serialization_time(wire_n, topo.wrapper)
+            network_t += wire_time(wire_n, links)
             # byte accounting is per wire hop relative to home (a payload
             # crossing two legs is counted on each): a hop whose far end
             # lies on its near end's route home is downlink — this keeps
@@ -417,9 +480,9 @@ class CostEngine:
             hops = topo.path_tiers(src, dst)
             for a, b in zip(hops, hops[1:]):
                 if b in topo.path_tiers(a, topo.home):
-                    down_bytes += nbytes
+                    down_bytes += wire_n
                 else:
-                    up_bytes += nbytes
+                    up_bytes += wire_n
 
         def _best_source(holders: Set[str], dst: str, nbytes: int) -> str:
             if len(holders) == 1:

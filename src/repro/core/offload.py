@@ -92,9 +92,10 @@ def evaluate_plan(
     comp: StagedComputation,
     placements: Sequence[str],
     env: EnvironmentLike,
+    codec=None,
 ) -> PlanReport:
     """Exact cost of one placement vector with residency tracking."""
-    return CostEngine(as_topology(env)).evaluate(comp, placements)
+    return CostEngine(as_topology(env), codec=codec).evaluate(comp, placements)
 
 
 def plan(
@@ -104,6 +105,7 @@ def plan(
     max_exhaustive: int = 20,
     planner: Optional[str] = None,
     occupancy: Optional[Dict[str, int]] = None,
+    codec=None,
 ) -> PlanReport:
     """Choose placements under a policy and return the cost report.
 
@@ -115,9 +117,13 @@ def plan(
     a specific AUTO strategy.  ``occupancy`` (tier name -> concurrent
     requests already there) makes the engine charge queueing inflation
     on contended tiers — how a fleet dispatcher prices a loaded edge.
+    ``codec`` (a ``repro.codec.CodecModel``) makes every transfer leg
+    codec-aware: compressed wire bytes plus encode/decode compute at
+    the payload's endpoints — which can flip AUTO's decision on links
+    where raw payloads drowned the offload win.
     """
     topo = as_topology(env)
-    engine = CostEngine(topo, occupancy=occupancy)
+    engine = CostEngine(topo, occupancy=occupancy, codec=codec)
     n = len(comp.stages)
     if policy is Policy.LOCAL:
         return engine.evaluate(comp, (topo.home,) * n)

@@ -181,6 +181,45 @@ def edge_batch_model(
     )
 
 
+# LPDDR-class memory bandwidth of a thin client (Raspberry-Pi grade):
+# the encode side of the payload codec streams the frame through this.
+CLIENT_MEM_BW = 10e9
+
+
+def codec_point(
+    quant_bits: int = 8,
+    keyframe_interval: int = 8,
+    change_density: float = 0.2,
+    client_tier: Tier = THIN_CLIENT_NO_GPU,
+    edge_tier: Tier = EDGE_GPU,
+):
+    """Roofline-calibrated codec operating point for the paper frame.
+
+    Encode runs on the thin client (its CPU rate against LPDDR
+    bandwidth), decode on the edge GPU (HBM scaled by the same peak
+    ratio as :func:`edge_batch_model`); both sides take the roofline
+    max of the kernels' arithmetic and their streaming floor.  The
+    defaults — 8-bit depth, keyframe every 8 frames, 20% tile change
+    density — sit near the stock ``data.rgbd`` sequence's measured
+    density (``codec.rate.calibrate_density_map``)."""
+    from repro.codec.model import CodecModel, tier_codec_rate
+    from repro.roofline import analysis
+
+    peak = edge_tier.accel_flops / SINGLE_STREAM_UTIL
+    edge_bw = analysis.HBM_BW * (peak / analysis.PEAK_FLOPS)
+    client_rate = tier_codec_rate(client_tier)
+    return CodecModel.from_roofline(
+        "delta_quant",
+        quant_bits=quant_bits,
+        keyframe_interval=keyframe_interval,
+        change_density=change_density,
+        encode_flops=client_rate,
+        encode_mem_bandwidth=CLIENT_MEM_BW,
+        decode_flops=edge_tier.accel_flops,
+        decode_mem_bandwidth=edge_bw,
+    )
+
+
 def fleet_star(
     num_edges: int = 2,
     edge_capacity: int = 4,

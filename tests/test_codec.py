@@ -1,0 +1,519 @@
+"""Payload codec: kernel/oracle equivalence, roundtrip bounds, wire
+accounting, cost-engine pricing, rate control and fleet integration.
+
+The acceptance contracts:
+* the delta codec roundtrips *bit-for-bit* at threshold 0 (XOR bit
+  deltas invert exactly), and under a threshold reconstructs within it;
+* quantize/pack roundtrips within the advertised half-step bound and
+  the packed words are exactly ``bits/32`` of the raw size;
+* exact encoded bytes never exceed raw bytes + the fixed header, and
+  the analytic ``CodecModel`` estimator respects the same bound;
+* batched kernels at B=1 are bit-for-bit the unbatched kernels;
+* an engine armed with the identity codec is bit-for-bit the raw
+  engine, and a fleet armed with it is event-for-event the raw fleet
+  (the golden off-switch);
+* a compressing codec strictly shrinks wire bytes and plan totals on
+  the 5G star, charges encode at the payload source and decode at the
+  destination, and prices migration state at keyframe (delta-free)
+  rates;
+* the rate controller walks its ladders deterministically — coarser
+  bits under sustained link pressure, shorter keyframe intervals under
+  scene motion — and re-plans through the shared cache.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cluster import LinkDrift, PlanCache, run_fleet
+from repro.cluster.dispatch import edge_subtopology
+from repro.codec import (
+    BITS_RAW,
+    CodecConfig,
+    CodecModel,
+    IDENTITY,
+    RateController,
+    identity_config,
+)
+from repro.codec import kernels as ck, ref as cr
+from repro.core.costengine import CostEngine
+from repro.core.offload import Policy, plan
+from repro.sim import hardware
+
+
+def _frames(h=48, w=256, seed=0, step=0.05):
+    """A frame pair differing on a localized region (one tile block)."""
+    rng = np.random.default_rng(seed)
+    ref_f = jnp.asarray(rng.normal(0.5, 0.1, (h, w)).astype(np.float32))
+    frame = ref_f.at[8:16, 0:128].add(step)
+    return frame, ref_f
+
+
+# ---------------------------------------------------------------------------
+# delta codec: lossless + thresholded roundtrips
+# ---------------------------------------------------------------------------
+
+
+def test_delta_roundtrip_lossless_bit_exact():
+    """threshold=0: every changed tile ships its XOR bit delta, so the
+    reconstruction is the input, bit for bit."""
+    frame, ref_f = _frames()
+    for enc, dec in ((cr.delta_encode, cr.delta_decode),
+                     (ck.delta_encode, ck.delta_decode)):
+        delta, mask = enc(frame, ref_f, threshold=0.0)
+        recon = dec(delta, ref_f)
+        assert np.array_equal(
+            np.asarray(recon, np.float32).view(np.int32),
+            np.asarray(frame, np.float32).view(np.int32),
+        )
+        # only the touched tile rows are marked changed
+        assert 0.0 < float(jnp.mean(mask)) < 1.0
+
+
+def test_delta_kernel_matches_ref_and_threshold_bounds_error():
+    frame, ref_f = _frames(step=0.05)
+    dk, mk = ck.delta_encode(frame, ref_f, threshold=0.0)
+    dr, mr = cr.delta_encode(frame, ref_f, threshold=0.0)
+    assert np.array_equal(np.asarray(dk), np.asarray(dr))
+    assert np.array_equal(np.asarray(mk), np.asarray(mr))
+    # a threshold above the change suppresses the tiles entirely; the
+    # reconstruction falls back to the reference, within the threshold
+    thr = 0.1
+    d2, m2 = ck.delta_encode(frame, ref_f, threshold=thr)
+    assert float(jnp.sum(m2)) == 0.0
+    recon = ck.delta_decode(d2, ref_f)
+    assert float(jnp.max(jnp.abs(recon - frame))) <= thr + 1e-7
+
+
+def test_delta_encode_batched_b1_bit_for_bit_and_vmap_agrees():
+    frame, ref_f = _frames(seed=3)
+    dk, mk = ck.delta_encode(frame, ref_f)
+    db, mb = ck.delta_encode_batched(frame[None], ref_f[None])
+    assert np.array_equal(np.asarray(db[0]), np.asarray(dk))
+    assert np.array_equal(np.asarray(mb[0]), np.asarray(mk))
+    stack_f = jnp.stack([frame, ref_f])
+    stack_r = jnp.stack([ref_f, frame])
+    grid = ck.delta_encode_batched(stack_f, stack_r)
+    vmap = ck.delta_encode_batched(stack_f, stack_r, path="vmap")
+    assert np.array_equal(np.asarray(grid[0]), np.asarray(vmap[0]))
+    assert np.array_equal(np.asarray(grid[1]), np.asarray(vmap[1]))
+    with pytest.raises(ValueError):
+        ck.delta_encode_batched(stack_f, stack_r, path="nope")
+
+
+def test_delta_unaligned_shapes_pad_and_crop():
+    """The paper depth plane (240 x 320) is not tile-aligned; the
+    wrapper pads, the kernel stays exact on the cropped output."""
+    rng = np.random.default_rng(7)
+    frame = jnp.asarray(rng.normal(0.5, 0.1, (240, 320)).astype(np.float32))
+    ref_f = frame.at[100:120, 200:240].add(0.02)
+    delta, mask = ck.delta_encode(frame, ref_f)
+    assert delta.shape == frame.shape
+    recon = ck.delta_decode(delta, ref_f)
+    assert np.array_equal(np.asarray(recon), np.asarray(frame))
+
+
+# ---------------------------------------------------------------------------
+# quantize + pack
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8, 16])
+def test_quantize_roundtrip_error_within_advertised_step(bits):
+    frame, _ = _frames(seed=bits)
+    lo, hi = 0.0, 1.0
+    words = ck.quantize_pack(frame, lo, hi, bits=bits)
+    ref_words = cr.quantize_pack(frame, lo, hi, bits=bits)
+    assert np.array_equal(np.asarray(words), np.asarray(ref_words))
+    # packing is exact: 32/bits codes per int32 word
+    assert words.shape == (frame.shape[0], frame.shape[1] * bits // 32)
+    recon = ck.unpack_dequantize(words, lo, hi, bits=bits)
+    step = cr.quant_step(lo, hi, bits)
+    clipped = jnp.clip(frame, lo, hi)
+    assert float(jnp.max(jnp.abs(recon - clipped))) <= step / 2 + 1e-7
+
+
+def test_quantize_pack_batched_b1_golden_and_bits_validated():
+    frame, other = _frames(seed=11)
+    solo = ck.quantize_pack(frame, 0.0, 1.0, bits=8)
+    batched = ck.quantize_pack_batched(
+        jnp.stack([frame, other]), 0.0, 1.0, bits=8
+    )
+    assert np.array_equal(np.asarray(batched[0]), np.asarray(solo))
+    vmap = ck.quantize_pack_batched(
+        jnp.stack([frame, other]), 0.0, 1.0, bits=8, path="vmap"
+    )
+    assert np.array_equal(np.asarray(batched), np.asarray(vmap))
+    with pytest.raises(ValueError):
+        ck.quantize_pack(frame, 0.0, 1.0, bits=3)
+    with pytest.raises(ValueError):
+        cr.quantize_pack(frame, 0.0, 1.0, bits=32)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting
+# ---------------------------------------------------------------------------
+
+
+def test_encoded_bytes_bounded_by_raw_plus_header():
+    frame, ref_f = _frames()
+    raw = frame.size * 4
+    header = 64
+    for thr in (0.0, 0.01, 1e9):
+        _, mask = ck.delta_encode(frame, ref_f, threshold=thr)
+        for bits in (8, 32):
+            n = cr.encoded_nbytes_exact(
+                mask, bits=bits, header_nbytes=header
+            )
+            assert n <= raw + header
+            assert n >= header  # the mask + header always ship
+
+
+def test_composed_quantized_delta_realizes_the_model_ratio():
+    """The format the analytic model prices: delta over *quantized
+    codes* (ref.encode_frame).  Exact wire bytes of a delta frame must
+    land at change_density * bits/32 of the raw size (plus mask +
+    header), and the roundtrip stays inside the quantizer's half-step
+    bound everywhere — changed tiles from their shipped codes,
+    unchanged tiles from the reference."""
+    frame, ref_f = _frames(step=0.05)
+    lo, hi, bits = 0.0, 1.0, 8
+    words, mask = cr.encode_frame(frame, ref_f, lo, hi, bits=bits)
+    recon = cr.decode_frame(words, mask, ref_f, lo, hi, bits=bits)
+    step = cr.quant_step(lo, hi, bits)
+    assert float(jnp.max(jnp.abs(recon - jnp.clip(frame, lo, hi)))) <= (
+        step / 2 + 1e-7
+    )
+    raw = frame.size * 4
+    density = float(jnp.mean(mask))
+    exact = cr.encoded_nbytes_exact(mask, bits=bits, header_nbytes=64)
+    modeled = 64 + raw * density * bits / 32
+    # exact count = modeled delta bytes + the mask bits (one per tile)
+    assert exact == pytest.approx(modeled + mask.size / 8, abs=8)
+    # and an identical frame ships nothing but mask + header
+    w2, m2 = cr.encode_frame(frame, frame, lo, hi, bits=bits)
+    assert float(jnp.sum(m2)) == 0.0
+    assert np.array_equal(
+        np.asarray(cr.decode_frame(w2, m2, ref_f, lo, hi, bits=bits)),
+        np.asarray(ref_f, np.float32),
+    )
+
+
+def test_change_density_measures_the_touched_region():
+    frame, ref_f = _frames()
+    dens = cr.change_density(jnp.stack([ref_f, frame, frame]))
+    # transition 0: one (8, 128)-tile region of a (48, 256) plane = 1/12
+    assert float(dens[0]) == pytest.approx(1.0 / 12.0)
+    assert float(dens[1]) == 0.0  # identical frames: nothing ships
+
+
+# ---------------------------------------------------------------------------
+# the analytic model + cost-engine pricing
+# ---------------------------------------------------------------------------
+
+
+def _point(bits=8, interval=8, density=0.2):
+    return CodecModel(
+        name="dq",
+        quant_bits=bits,
+        keyframe_interval=interval,
+        change_density=density,
+        header_nbytes=64,
+        encode_flops_per_byte=3.0,
+        decode_flops_per_byte=19.0,
+    )
+
+
+def test_codec_model_ratios_and_bounds():
+    m = _point()
+    assert m.keyframe_ratio == 0.25
+    assert m.delta_ratio == pytest.approx(0.05)
+    assert 0.0 < m.ratio < m.keyframe_ratio
+    raw = 537_600
+    assert m.wire_nbytes(raw) <= raw + m.header_nbytes
+    assert m.wire_nbytes(raw) < raw
+    # below the payload gate nothing is transformed
+    assert m.wire_nbytes(108) == 108
+    assert m.encode_time(108, hardware.EDGE_GPU) == 0.0
+    # the identity codec never applies
+    assert IDENTITY.ratio == 1.0
+    assert not IDENTITY.applies(raw)
+    assert IDENTITY.wire_nbytes(raw) == raw
+    with pytest.raises(ValueError):
+        CodecModel(name="bad", quant_bits=0)
+    with pytest.raises(ValueError):
+        CodecModel(name="bad", change_density=1.5)
+    with pytest.raises(ValueError):
+        CodecModel(name="bad", keyframe_interval=0)
+
+
+def test_identity_codec_is_bit_for_bit_the_raw_engine():
+    comp = hardware.paper_staged().fused()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    sub = edge_subtopology(topo, "edge_0")
+    raw = CostEngine(sub).evaluate(comp, ("edge_0",))
+    ident = CostEngine(sub, codec=IDENTITY).evaluate(comp, ("edge_0",))
+    assert raw == ident  # full PlanReport equality, legs and all
+
+
+def test_codec_prices_encode_at_source_decode_at_destination():
+    comp = hardware.paper_staged().fused()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    sub = edge_subtopology(topo, "edge_0")
+    m = _point()
+    raw = CostEngine(sub).evaluate(comp, ("edge_0",))
+    enc = CostEngine(sub, codec=m).evaluate(comp, ("edge_0",))
+    assert enc.uplink_bytes < raw.uplink_bytes
+    assert enc.total_time < raw.total_time
+    by_tier_raw = dict(raw.compute_by_tier)
+    by_tier = dict(enc.compute_by_tier)
+    # encode appears at home (absent in the raw plan), decode inflates
+    # the edge's entry (slot work in the fleet)
+    assert "client" not in by_tier_raw and by_tier["client"] > 0.0
+    assert by_tier["edge_0"] > by_tier_raw["edge_0"]
+    # planner scalars agree with evaluate: AUTO picks the same plan and
+    # reports the same total under the codec
+    auto = plan(comp, sub, Policy.AUTO, codec=m)
+    assert auto.total_time == enc.total_time
+
+
+def test_migration_state_prices_at_keyframe_rates():
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    nbytes = 21_000
+    m = _point()
+    raw_t = CostEngine(topo).migration_time(nbytes, "edge_0", "edge_1")
+    codec_t = CostEngine(topo, codec=m).migration_time(
+        nbytes, "edge_0", "edge_1"
+    )
+    assert codec_t < raw_t  # quantized state is cheaper to move
+    # but never priced at the (cheaper still) amortized delta ratio:
+    # the destination holds no reference frame
+    assert m.state_wire_nbytes(nbytes) > m.wire_nbytes(nbytes)
+    # identity codec: exactly the raw transfer
+    assert CostEngine(topo, codec=IDENTITY).migration_time(
+        nbytes, "edge_0", "edge_1"
+    ) == raw_t
+
+
+def test_codec_point_is_roofline_calibrated():
+    m = hardware.codec_point()
+    # decode on the edge GPU is bandwidth-bound: its per-byte cost must
+    # sit at the streaming floor, above the raw kernel arithmetic
+    from repro.codec.model import DECODE_OPS_PER_BYTE, ENCODE_OPS_PER_BYTE
+
+    assert m.decode_flops_per_byte > DECODE_OPS_PER_BYTE
+    # encode on the thin client is compute-bound: kernel arithmetic
+    assert m.encode_flops_per_byte == ENCODE_OPS_PER_BYTE
+    assert m.applies(hardware.PAPER_FRAME_BYTES)
+
+
+# ---------------------------------------------------------------------------
+# rate control
+# ---------------------------------------------------------------------------
+
+
+def _legs(plan_rep):
+    """Observed draws exactly at the plan's charged latencies."""
+    return tuple((leg.link, leg.latency) for leg in plan_rep.legs)
+
+
+def _pressured(plan_rep, factor):
+    return tuple((leg.link, leg.latency * factor) for leg in plan_rep.legs)
+
+
+def _plan_for(topo, edge="edge_0"):
+    comp = hardware.paper_staged().fused()
+    return plan(comp, edge_subtopology(topo, edge), Policy.AUTO)
+
+
+def test_rate_controller_drops_bits_under_link_pressure():
+    topo = hardware.fleet_star()
+    rep = _plan_for(topo)
+    cfg = CodecConfig(base=_point(), min_dwell_frames=4)
+    rc = RateController(cfg)
+    assert rc.model.quant_bits == cfg.bits_ladder[0]
+    switched = None
+    for i in range(40):
+        switched = rc.observe(i, _pressured(rep, 2.0), rep) or switched
+    assert switched is not None
+    assert rc.model.quant_bits == cfg.bits_ladder[-1]
+    # pressure relaxes -> the controller walks back up, but only after
+    # the dwell (hysteresis)
+    for i in range(40, 80):
+        rc.observe(i, _legs(rep), rep)
+    assert rc.model.quant_bits == cfg.bits_ladder[0]
+
+
+def test_rate_controller_shortens_keyframes_under_motion():
+    cfg = CodecConfig(
+        base=_point(),
+        min_dwell_frames=0,
+        motion=(0.0,) * 30 + (0.1,) * 30,  # still, then a fast burst
+        # explicit density map so the cut crossings are unambiguous: at
+        # rest the estimate (0.05) sits under every cut, the burst
+        # (0.45) clears them all
+        density_gain=4.0,
+        density_floor=0.05,
+    )
+    rc = RateController(cfg)
+    topo = hardware.fleet_star()
+    rep = _plan_for(topo)
+    assert rc.model.keyframe_interval == cfg.interval_ladder[-1]  # still
+    for i in range(60):
+        rc.observe(i, _legs(rep), rep)
+        if i < 29:
+            assert rc.model.keyframe_interval == cfg.interval_ladder[-1]
+    # the burst's density estimate crosses every cut: shortest interval
+    assert rc.model.keyframe_interval == cfg.interval_ladder[0]
+    assert rc.switches >= 1
+
+
+def test_rate_controller_dwell_bounds_switches():
+    """Alternating motion that proposes a different point every frame
+    can only switch once per dwell window."""
+    frames = 120
+    dwell = 20
+    motion = tuple(0.1 * (i % 2) for i in range(frames))
+    cfg = CodecConfig(base=_point(), min_dwell_frames=dwell, motion=motion)
+    rc = RateController(cfg)
+    topo = hardware.fleet_star()
+    rep = _plan_for(topo)
+    for i in range(frames):
+        rc.observe(i, _legs(rep), rep)
+    assert rc.switches <= frames // dwell + 1
+
+
+def test_codec_config_validates():
+    with pytest.raises(ValueError):
+        CodecConfig(base=_point(), bits_ladder=())
+    with pytest.raises(ValueError):
+        CodecConfig(base=_point(), bits_ladder=(16, 3))
+    with pytest.raises(ValueError):
+        CodecConfig(base=_point(), density_cuts=(0.1, 0.2, 0.3))
+    with pytest.raises(ValueError):
+        CodecConfig(base=_point(), density_bins=())
+    with pytest.raises(ValueError):
+        # a bin ladder that stops short of 1.0 would snap high
+        # densities DOWN and underprice the wire
+        CodecConfig(base=_point(), density_bins=(0.05, 0.1))
+    with pytest.raises(ValueError):
+        CodecConfig(base=_point(), pressure_alpha=0.0)
+    assert CodecConfig(base=_point(), bits_ladder=(BITS_RAW, 8))
+
+
+def test_density_calibration_has_positive_motion_gain():
+    """The stock sequence's measured tile densities rise with wrist
+    translation — the sign the controller's density map relies on."""
+    from repro.codec import calibrate_density_map
+    from repro.data import rgbd
+
+    gain, floor = calibrate_density_map(
+        rgbd.SequenceConfig(num_frames=30, noise_std=0.0)
+    )
+    assert gain > 0.0
+    assert 0.0 < floor < 1.0
+    # the fleet-facing motion signal: one entry per frame transition
+    from repro.codec import sequence_motion
+
+    motion = sequence_motion(rgbd.SequenceConfig(num_frames=10))
+    assert len(motion) == 9 and all(m >= 0.0 for m in motion)
+
+
+# ---------------------------------------------------------------------------
+# fleet integration
+# ---------------------------------------------------------------------------
+
+
+def _codec_cfg(**kwargs):
+    kwargs.setdefault("base", _point())
+    return CodecConfig(**kwargs)
+
+
+@pytest.mark.parametrize("batching", [False, True])
+def test_identity_codec_fleet_is_event_for_event_the_raw_fleet(batching):
+    """The golden off-switch at fleet scale, FIFO and fused serving."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(
+        num_edges=2, edge_capacity=2, batching=batching
+    )
+    kwargs = dict(num_frames=60, seed=2, gather_window=1.25e-3)
+    raw = run_fleet(topo, comp, 6, **kwargs)
+    ident = run_fleet(topo, comp, 6, codec=identity_config(), **kwargs)
+    for a, b in zip(raw.clients, ident.clients):
+        assert a.stats.processed == b.stats.processed
+        assert a.stats.duration == b.stats.duration
+        assert a.total_wait == b.total_wait
+        assert a.plan.total_time == b.plan.total_time
+        assert b.rate_changes == 0  # the identity config never adapts
+    assert [e.admitted for e in raw.edges] == [e.admitted for e in ident.edges]
+
+
+def test_codec_fleet_ships_fewer_bytes_and_more_fps():
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    raw = run_fleet(topo, comp, 6, num_frames=60, seed=0)
+    enc = run_fleet(
+        topo, comp, 6, num_frames=60, seed=0, codec=_codec_cfg(adapt=False)
+    )
+    assert enc.mean_uplink_bytes < 0.25 * raw.mean_uplink_bytes
+    assert enc.mean_achieved_fps > raw.mean_achieved_fps
+    assert enc.drop_rate <= raw.drop_rate
+    for c in enc.clients:
+        assert c.codec is not None and c.codec.quant_bits == 8
+
+
+def test_rate_switches_replan_through_the_shared_cache():
+    """An operating-point switch is a cache miss the first time and a
+    hit for every client thereafter: N identical clients cost
+    O(edges x operating points) plans, not O(N)."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    motion = (0.0,) * 25 + (0.1,) * 50  # one fleet-wide burst
+    cache = PlanCache()
+    res = run_fleet(
+        topo,
+        comp,
+        8,
+        num_frames=75,
+        seed=0,
+        cache=cache,
+        codec=_codec_cfg(min_dwell_frames=5, motion=motion),
+    )
+    assert res.total_rate_changes >= 8  # every client switched at least once
+    # distinct plans: 2 edges x operating points actually visited —
+    # far fewer than clients x switches
+    assert len(cache._plans) <= 2 * 4
+    assert cache.stats.hit_rate > 0.5
+
+
+def test_codec_fleet_with_link_drift_still_replans():
+    """Link drift and rate control compose: the drifted client re-plans
+    (codec-keyed) and both counters advance independently."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    res = run_fleet(
+        topo,
+        comp,
+        2,
+        num_frames=120,
+        seed=0,
+        codec=_codec_cfg(adapt=False),
+        drifts=[LinkDrift(time=1.0, link="5g_edge_0", latency=30e-3)],
+        drift_threshold=0.3,
+    )
+    drifted = [c for c in res.clients if c.replans > 0]
+    assert drifted  # the edge_0 client noticed its link move
+    for c in res.clients:
+        assert c.codec is not None  # codec survives the re-plan
+
+
+def test_codec_fleet_is_seed_deterministic():
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    cfg = _codec_cfg()
+    a = run_fleet(topo, comp, 6, num_frames=60, seed=5, codec=cfg)
+    b = run_fleet(topo, comp, 6, num_frames=60, seed=5, codec=cfg)
+    assert a.clients == b.clients
+    assert a.edges == b.edges

@@ -527,3 +527,138 @@ def test_tracker_state_nbytes_and_config_validation():
         # blind rotation carries no load signal for live re-dispatch
         MigrationConfig(target_policy="round_robin")
     MigrationConfig(target_policy="least_queue")  # load-aware: accepted
+
+
+# ---------------------------------------------------------------------------
+# predictor calibration: measured-wait EWMA vs plan-total misprediction
+# ---------------------------------------------------------------------------
+
+
+def test_wait_ewma_smooths_and_defaults_to_off():
+    cfg = MigrationConfig(wait_ewma_alpha=0.5)
+    ctrl = _controller(cfg, _star(), _comp(), {"edge_0": _FakeServer(),
+                                               "edge_1": _FakeServer()})
+    assert ctrl.wait_ewma("edge_0") == 0.0  # no samples yet
+    ctrl.observe_wait("edge_0", 0.1)
+    assert ctrl.wait_ewma("edge_0") == 0.1  # first sample seeds the EWMA
+    ctrl.observe_wait("edge_0", 0.3)
+    assert ctrl.wait_ewma("edge_0") == pytest.approx(0.2)
+    with pytest.raises(ValueError):
+        MigrationConfig(wait_ewma_blend=1.5)
+    with pytest.raises(ValueError):
+        MigrationConfig(wait_ewma_alpha=0.0)
+
+
+def test_throttled_edge_mispredicts_without_wait_ewma():
+    """The calibration contract, at the controller level: an empty but
+    *throttled* edge looks ideal to plan totals + live queue depth (the
+    historical predictor), so the client walks into it; blending the
+    measured-wait EWMA keeps it out.  Same topology, same live signals,
+    same measured evidence — only the blend differs."""
+    comp = _comp(flops=40e9)  # ~80 ms edge service: occupancy dominates
+    topo = _star(num_edges=2)
+    for blend, expect_move in ((0.0, True), (0.7, False)):
+        servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+        cfg = MigrationConfig(
+            min_dwell_frames=0,
+            improvement_threshold=0.05,
+            wait_ewma_blend=blend,
+        )
+        ctrl = _controller(cfg, topo, comp, servers, start_edge="edge_1")
+        # a second client is committed to edge_1; edge_0 sits empty
+        ctrl.assignments["edge_1"] = 2
+        # measured evidence: edge_0 is thermally throttled (its recent
+        # frames waited ~200 ms), edge_1 waits are mild
+        for _ in range(4):
+            ctrl.observe_wait("edge_0", 0.2)
+            ctrl.observe_wait("edge_1", 0.02)
+        move = ctrl.consider(0, "edge_1", now=1.0, state_src="edge_1")
+        if expect_move:
+            assert move is not None and move[0] == "edge_0"  # mispredicts
+        else:
+            assert move is None  # the measured waits expose the throttle
+
+
+def test_service_drift_throttle_is_invisible_to_plans_but_not_waits():
+    """Fleet-level ServiceDrift mechanics: a throttle factor of 1.0 is
+    bit-for-bit no drift; a real throttle inflates only measured waits
+    (plans and link observations are untouched), so drop rate rises
+    with no re-plans."""
+    from repro.cluster import ServiceDrift
+    from repro.net import links
+
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2,
+                               base_link=links.GIGABIT_ETHERNET)
+    base = run_fleet(topo, comp, 4, num_frames=120, seed=0)
+    noop = run_fleet(topo, comp, 4, num_frames=120, seed=0,
+                     drifts=[ServiceDrift(time=1.0, edge="edge_0", factor=1.0)])
+    for a, b in zip(base.clients, noop.clients):
+        assert a.stats.processed == b.stats.processed
+        assert a.total_wait == b.total_wait
+    hot = run_fleet(topo, comp, 4, num_frames=120, seed=0,
+                    drifts=[ServiceDrift(time=1.0, edge="edge_0", factor=8.0)])
+    assert hot.drop_rate > base.drop_rate
+    assert hot.total_replans == 0  # nothing crossed the wire differently
+    with pytest.raises(ValueError):
+        run_fleet(topo, comp, 2, num_frames=10,
+                  drifts=[ServiceDrift(time=0.0, edge="nope", factor=2.0)])
+
+
+def test_wait_ewma_blend_evacuates_a_throttled_edge():
+    """End to end: a mid-run thermal throttle on one edge.  The plain
+    predictor (blend 0) never moves — plan totals cannot see the
+    throttle and the queue-depth signal at decision time is ambiguous —
+    while the blended predictor drains the throttled edge and recovers
+    most of the dropped frames."""
+    from repro.cluster import ServiceDrift
+    from repro.net import links
+
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2,
+                               base_link=links.GIGABIT_ETHERNET)
+    drifts = [ServiceDrift(time=1.0, edge="edge_0", factor=8.0)]
+    kwargs = dict(num_frames=240, seed=0, dispatch="least_queue",
+                  drifts=drifts)
+    plain = run_fleet(topo, comp, 6,
+                      migration=MigrationConfig(min_dwell_frames=10),
+                      **kwargs)
+    blended = run_fleet(
+        topo, comp, 6,
+        migration=MigrationConfig(min_dwell_frames=10, wait_ewma_blend=0.6),
+        **kwargs,
+    )
+    assert plain.total_migrations == 0  # the misprediction, fleet-scale
+    assert blended.total_migrations > 0
+    assert all(c.edge != "edge_0" for c in blended.clients)
+    assert blended.drop_rate < 0.5 * plain.drop_rate
+    assert blended.p99_loop_time < plain.p99_loop_time
+
+
+def test_wait_ewma_evidence_decays_with_age():
+    """Measured evidence ages: right after the samples the throttled
+    edge repels the client, but long after anyone last visited it the
+    blend weight has halved away and the model (which sees an empty
+    edge) wins again — the re-probe that stops a stale measurement
+    pinning the fleet off a recovered edge forever."""
+    comp = _comp(flops=40e9)
+    topo = _star(num_edges=2)
+    servers = {"edge_0": _FakeServer(), "edge_1": _FakeServer()}
+    cfg = MigrationConfig(
+        min_dwell_frames=0,
+        improvement_threshold=0.05,
+        wait_ewma_blend=0.7,
+        wait_ewma_half_life=3.0,
+    )
+    ctrl = _controller(cfg, topo, comp, servers, start_edge="edge_1")
+    ctrl.assignments["edge_1"] = 2
+    for _ in range(4):
+        ctrl.observe_wait("edge_0", 0.2, now=0.5)
+        ctrl.observe_wait("edge_1", 0.02, now=0.5)
+    # fresh evidence: the throttled edge is out
+    assert ctrl.consider(0, "edge_1", now=1.0, state_src="edge_1") is None
+    # ~20 half-lives later the stale sample carries no weight
+    move = ctrl.consider(0, "edge_1", now=60.0, state_src="edge_1")
+    assert move is not None and move[0] == "edge_0"
+    with pytest.raises(ValueError):
+        MigrationConfig(wait_ewma_half_life=0.0)

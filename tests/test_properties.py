@@ -13,13 +13,21 @@ installed):
   time, never worse than serializing the launches, and amortize
   monotonically once a real batch forms (per-item time non-increasing
   for B >= 2; the 1 -> 2 step additionally needs the fusion overhead to
-  be amortizable, since a batch of one pays no overhead at all).
+  be amortizable, since a batch of one pays no overhead at all);
+* ``CodecModel`` wire estimates never exceed raw + header, shrink
+  monotonically with fewer quantizer bits and sparser change masks,
+  and the quantizer's reference roundtrip stays inside the advertised
+  half-step bound for every packable width;
+* an engine armed with the identity codec prices every plan
+  bit-for-bit like the raw engine, for any link conditions.
 """
 
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+from repro.codec import CodecModel, IDENTITY
+from repro.codec import ref as codec_ref
 from repro.core.costengine import BatchServiceModel, CostEngine
 from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
 from repro.core.topology import Link, Tier, Topology, WrapperModel, sample_latency
@@ -193,3 +201,91 @@ def test_batch_model_validates_parameters():
     with pytest.raises(ValueError):
         BatchServiceModel(marginal_fraction=1.5)
     assert BatchServiceModel().batch_time([]) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# payload codec invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.sampled_from([1, 2, 4, 8, 16, 32]),
+    st.integers(min_value=1, max_value=30),
+    st.floats(min_value=0.0, max_value=1.0),
+    st.integers(min_value=4096, max_value=2_000_000),
+)
+def test_codec_wire_bytes_bounded_and_monotone(bits, interval, density, nbytes):
+    m = CodecModel(
+        name="prop",
+        quant_bits=bits,
+        keyframe_interval=interval,
+        change_density=density,
+        header_nbytes=64,
+    )
+    wire = m.wire_nbytes(nbytes)
+    # the raw + header bound, and the clamp to never exceed raw
+    assert wire <= nbytes + m.header_nbytes
+    assert wire <= nbytes
+    assert wire >= 0
+    # fewer bits can only shrink the estimate (same delta structure)
+    if bits > 1:
+        finer = CodecModel(
+            name="prop",
+            quant_bits=max(1, bits // 2),
+            keyframe_interval=interval,
+            change_density=density,
+            header_nbytes=64,
+        )
+        assert finer.wire_nbytes(nbytes) <= wire
+    # sparser change masks can only shrink a delta-bearing stream
+    sparser = CodecModel(
+        name="prop",
+        quant_bits=bits,
+        keyframe_interval=interval,
+        change_density=density / 2,
+        header_nbytes=64,
+    )
+    assert sparser.wire_nbytes(nbytes) <= wire
+    # state (keyframe) pricing never undercuts the amortized stream
+    assert m.state_wire_nbytes(nbytes) >= wire
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.sampled_from([2, 4, 8, 16]),
+    st.integers(min_value=0, max_value=2 ** 16 - 1),
+    st.floats(min_value=0.05, max_value=2.0),
+)
+def test_quantizer_roundtrip_stays_inside_half_step(bits, seed, span):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    lo, hi = 0.1, 0.1 + span
+    frame = jnp.asarray(
+        rng.uniform(lo - 0.2, hi + 0.2, size=(16, 32)).astype(np.float32)
+    )
+    words = codec_ref.quantize_pack(frame, lo, hi, bits=bits, block_w=32)
+    recon = codec_ref.unpack_dequantize(words, lo, hi, bits=bits)
+    step = codec_ref.quant_step(lo, hi, bits)
+    err = float(jnp.max(jnp.abs(recon - jnp.clip(frame, lo, hi))))
+    assert err <= step / 2 + 1e-6 * span
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    st.floats(min_value=1e-4, max_value=40e-3),
+    st.integers(min_value=1, max_value=4),
+)
+def test_identity_codec_engine_equals_raw_engine(latency, n_remote):
+    comp = _comp(n_stages=4)
+    topo = _two_tier(latency)
+    placements = tuple(
+        "server" if i < n_remote else "client" for i in range(4)
+    )
+    raw = CostEngine(topo).evaluate(comp, placements)
+    ident = CostEngine(topo, codec=IDENTITY).evaluate(comp, placements)
+    assert raw == ident  # bit-for-bit, legs and byte counters included
+    assert CostEngine(topo, codec=IDENTITY).transfer_scalar(
+        400_000, "client", "server"
+    ) == CostEngine(topo).transfer_scalar(400_000, "client", "server")
