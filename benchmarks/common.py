@@ -1,11 +1,26 @@
-"""Benchmark helpers: timing + CSV row emission."""
+"""Benchmark helpers: timing + CSV row emission + JSON artifacts."""
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 from typing import Callable, Iterable, Tuple
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+# benchmark JSON artifacts land at the repo root as BENCH_<name>.json so
+# CI runs (and humans diffing two checkouts) can compare machine-readable
+# knees / events-per-second / p99 numbers instead of scraping CSV
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def write_bench_json(name: str, payload: dict) -> pathlib.Path:
+    """Dump ``payload`` to ``BENCH_<name>.json`` at the repo root."""
+    path = REPO_ROOT / f"BENCH_{name}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {path.name}")
+    return path
 
 
 def time_fn(fn: Callable, *args, repeats: int = 5, warmup: int = 2) -> float:

@@ -24,6 +24,25 @@ instead sweeps weak-factor x client-count and emits a JSON grid of
 where migration stops paying (state-transfer cost + residual imbalance
 vs the static fleet).
 
+``--events`` races the two fleet engines — the object event loop vs the
+vectorized ``fastfleet`` engine (packed-payload heap, struct-of-arrays
+client state, block-drawn RNG, precomputed drift decisions) — on the
+SAME workload, asserts they process the same number of events, and
+reports events/sec for each plus the speedup ratio (kernel_bench-style
+rows, best-of-N wall time).  ``--smoke`` runs the 256-client shape and
+CI-asserts the vectorized engine clears ``EVENTS_MIN_SPEEDUP``; the
+full run adds the 1000-client shape.  Honest numbers: on an otherwise
+idle dev box the ratio measures ~3x (the issue's 10x aspiration is not
+reachable on CPython without giving up event-for-event equivalence),
+and shared CI runners add +-20% noise, so the asserted floor is the
+conservative 2x.
+
+``--scale`` is the open-loop scale sweep: heterogeneous client classes
+(``hardware.hetero_fleet_star`` — phone/laptop/AGX tiers with their own
+uplinks) against a 64-edge star, swept to 10,000 clients on the
+vectorized engine.  Reports fps/drop/p99 per point plus aggregate
+events/sec, and writes ``BENCH_fleet_scale.json``.
+
 ``--codec`` measures the *payload-codec* capacity shift on the 5G star
 — the network-bound regime where PR 3's batching barely moved the knee
 (ROADMAP batching follow-up (d)).  The same batching-enabled 5G star
@@ -40,12 +59,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import time
 
-from repro.cluster import MigrationConfig, capacity_sweep, run_fleet
+from repro.cluster import MigrationConfig, PlanCache, capacity_sweep, run_fleet
 from repro.codec import CodecConfig, identity_config, sequence_motion
 from repro.core.offload import Policy
 from repro.net import links
 from repro.sim import hardware
+
+try:
+    from benchmarks.common import write_bench_json
+except ModuleNotFoundError:  # run as a script: sys.path[0] is benchmarks/
+    from common import write_bench_json
 
 # the paper's "real-time" bar for the knee: 25 fps (Fig. 3 discussion —
 # below this the gap distribution visibly degrades tracking)
@@ -64,6 +89,23 @@ MIG_MAX_MOVES_PER_CLIENT = 3  # hysteresis flap bound
 # 40 ms real-time budget)
 CODEC_MIN_KNEE_SHIFT = 1.5
 CODEC_GATHER_WINDOW = 1.25e-3
+
+# the events gate: vectorized engine throughput vs the object engine on
+# the identical workload.  Measured ~3x best-of-3 on an idle dev box
+# (256 clients: 3.2x, 1000 clients: 2.9x); shared CI runners swing
+# +-20%, so the CI floor is the conservative 2x.  The sweep asserts
+# event-COUNT equality every rep — the speedup is only meaningful while
+# the engines stay event-for-event identical.
+EVENTS_MIN_SPEEDUP = 2.0
+EVENTS_BENCH_REPS = 3
+# (clients, edges, frames) per sweep shape; smoke runs the first only
+EVENTS_SHAPES = ((256, 16, 120), (1000, 64, 100))
+
+# the open-loop scale sweep: heterogeneous classes on a wide star
+SCALE_NUM_EDGES = 64
+SCALE_EDGE_CAPACITY = 8
+SCALE_COUNTS = (1000, 2500, 5000, 10_000)
+SCALE_COUNTS_SMOKE = (256, 1000)
 
 
 def _sweep_rows(client_counts, num_frames) -> list:
@@ -326,6 +368,160 @@ def _migration_grid(weak_factors, client_counts, num_frames) -> list:
     return grid
 
 
+def _events_rows(shapes, reps: int = EVENTS_BENCH_REPS) -> tuple:
+    """Race the object and vectorized engines on identical workloads.
+
+    Each rep gets a fresh ``PlanCache`` so both engines replan the same
+    plans from cold; best-of-N wall time is the throughput basis (the
+    engines are deterministic — the minimum is the least-noise sample).
+    Event counts are asserted equal every rep: the ratio is only
+    meaningful while the engines simulate the same event stream.
+    """
+    comp = hardware.paper_staged()
+    rows = []
+    points = []
+    for num_clients, num_edges, num_frames in shapes:
+        topo = hardware.fleet_star(num_edges=num_edges, edge_capacity=8)
+        timing = {}
+        for eng in ("object", "vector"):
+            best = float("inf")
+            events = None
+            for _ in range(reps):
+                cache = PlanCache()
+                t0 = time.perf_counter()
+                r = run_fleet(
+                    topo,
+                    comp,
+                    num_clients=num_clients,
+                    num_frames=num_frames,
+                    policy=Policy.AUTO,
+                    cache=cache,
+                    engine=eng,
+                )
+                dt = time.perf_counter() - t0
+                best = min(best, dt)
+                if events is not None and r.events != events:
+                    raise SystemExit(
+                        f"{eng} engine event count varied across reps "
+                        f"({events} vs {r.events}) — nondeterminism"
+                    )
+                events = r.events
+            timing[eng] = (events, best)
+        ev_o, t_o = timing["object"]
+        ev_v, t_v = timing["vector"]
+        if ev_o != ev_v:
+            raise SystemExit(
+                f"engines diverged at {num_clients} clients: object "
+                f"processed {ev_o} events, vector {ev_v} — the speedup "
+                "ratio is meaningless until equivalence is restored"
+            )
+        ratio = t_o / t_v
+        point = {
+            "clients": num_clients,
+            "edges": num_edges,
+            "frames": num_frames,
+            "events": ev_o,
+            "object_events_per_s": round(ev_o / t_o, 1),
+            "vector_events_per_s": round(ev_v / t_v, 1),
+            "speedup": round(ratio, 3),
+        }
+        points.append(point)
+        for eng, (ev, t) in timing.items():
+            rows.append((
+                f"fleet/events_{eng}_n{num_clients}",
+                t / ev * 1e6,
+                f"events={ev};events_per_s={ev / t:.3e};"
+                f"wall_s={t:.3f};reps={reps}",
+            ))
+        rows.append((
+            f"fleet/events_speedup_n{num_clients}",
+            0.0,
+            f"speedup={ratio:.2f}x;gate={EVENTS_MIN_SPEEDUP:.1f}x",
+        ))
+    return rows, points
+
+
+def _assert_events_gate(points) -> None:
+    worst = min(p["speedup"] for p in points)
+    print(
+        "# events gate: "
+        + ", ".join(
+            f"{p['clients']}c {p['speedup']:.2f}x "
+            f"({p['vector_events_per_s'] / 1e3:.0f}k ev/s)"
+            for p in points
+        )
+    )
+    if worst < EVENTS_MIN_SPEEDUP:
+        raise SystemExit(
+            f"vectorized engine only {worst:.2f}x the object engine "
+            f"(expected >= {EVENTS_MIN_SPEEDUP}x)"
+        )
+
+
+def _scale_rows(client_counts, num_frames) -> tuple:
+    """Open-loop heterogeneous sweep on the vectorized engine.
+
+    One shared ``PlanCache`` across the whole sweep (the capacity_sweep
+    contract) — with heterogeneous classes the cache holds one plan per
+    (edge, client-class) pair, not per client, which is what makes the
+    10k point plan in milliseconds instead of minutes.
+    """
+    comp = hardware.paper_staged()
+    topo, classes = hardware.hetero_fleet_star(
+        num_edges=SCALE_NUM_EDGES, edge_capacity=SCALE_EDGE_CAPACITY
+    )
+    rows = []
+    points = []
+    t0 = time.perf_counter()
+    pts = capacity_sweep(
+        topo,
+        comp,
+        client_counts,
+        num_frames=num_frames,
+        policy=Policy.AUTO,
+        dispatch="least_queue",
+        client_classes=classes,
+        engine="vector",
+    )
+    wall = time.perf_counter() - t0
+    total_events = sum(p.result.events for p in pts)
+    for p in pts:
+        r = p.result
+        points.append({
+            "clients": p.num_clients,
+            "events": r.events,
+            "fps": round(p.fps, 2),
+            "drop_rate": round(p.drop_rate, 4),
+            "p99_ms": round(p.p99 * 1e3, 2),
+            "cache_hit_rate": round(r.cache.stats.hit_rate, 4),
+        })
+        rows.append((
+            f"fleet/scale_n{p.num_clients}",
+            r.mean_loop_time * 1e6,
+            f"fps={p.fps:.1f};drop={p.drop_rate:.3f};"
+            f"p99_ms={p.p99 * 1e3:.1f};events={r.events};"
+            f"cache_hit={r.cache.stats.hit_rate:.2f}",
+        ))
+    summary = {
+        "engine": "vector",
+        "num_edges": SCALE_NUM_EDGES,
+        "edge_capacity": SCALE_EDGE_CAPACITY,
+        "num_frames": num_frames,
+        "classes": [c.name for c in classes],
+        "total_events": total_events,
+        "wall_s": round(wall, 2),
+        "events_per_s": round(total_events / wall, 1),
+        "points": points,
+    }
+    rows.append((
+        "fleet/scale_total",
+        wall / max(total_events, 1) * 1e6,
+        f"events={total_events};events_per_s={total_events / wall:.3e};"
+        f"wall_s={wall:.1f}",
+    ))
+    return rows, summary
+
+
 def bench() -> list:
     return _sweep_rows((1, 2, 4, 8, 16, 32), num_frames=300)
 
@@ -357,6 +553,19 @@ def main() -> None:
         "is event-for-event the raw fleet",
     )
     ap.add_argument(
+        "--events",
+        action="store_true",
+        help="race the object vs vectorized fleet engines on identical "
+        "workloads, assert equal event counts and a >= "
+        f"{EVENTS_MIN_SPEEDUP}x events/sec speedup",
+    )
+    ap.add_argument(
+        "--scale",
+        action="store_true",
+        help="open-loop heterogeneous sweep to 10k clients on the "
+        "vectorized engine (1k in --smoke); writes BENCH_fleet_scale.json",
+    )
+    ap.add_argument(
         "--grid",
         action="store_true",
         help="with --migration: emit a weak-factor x client-count JSON "
@@ -383,7 +592,15 @@ def main() -> None:
         )
         print(json.dumps(grid, indent=2))
         return
-    if args.codec:
+    if args.events:
+        shapes = EVENTS_SHAPES[:1] if args.smoke else EVENTS_SHAPES
+        rows, ev_points = _events_rows(shapes)
+    elif args.scale:
+        rows, scale_summary = _scale_rows(
+            SCALE_COUNTS_SMOKE if args.smoke else SCALE_COUNTS,
+            num_frames=60 if args.smoke else 120,
+        )
+    elif args.codec:
         counts = (
             (1, 2, 4, 6, 8, 12, 16)
             if args.smoke
@@ -426,6 +643,22 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.events:
+        _assert_events_gate(ev_points)
+        write_bench_json(
+            "fleet_events",
+            {
+                "gate_min_speedup": EVENTS_MIN_SPEEDUP,
+                "reps": EVENTS_BENCH_REPS,
+                "smoke": args.smoke,
+                "points": ev_points,
+            },
+        )
+        return
+    if args.scale:
+        scale_summary["smoke"] = args.smoke
+        write_bench_json("fleet_scale", scale_summary)
+        return
     if args.codec:
         shift = (
             knees["codec"] / knees["raw"] if knees["raw"] else float("inf")
@@ -448,6 +681,15 @@ def main() -> None:
                 f"(expected >= {CODEC_MIN_KNEE_SHIFT}x)"
             )
         _assert_codec_identity_golden(codec_window)
+        write_bench_json(
+            "fleet_codec",
+            {
+                "knee_fps": KNEE_FPS,
+                "knees": knees,
+                "knee_shift": round(shift, 3),
+                "smoke": args.smoke,
+            },
+        )
     elif args.migration:
         _assert_migration_gate(curves)
     elif args.batching:
@@ -473,6 +715,15 @@ def main() -> None:
                 f"batched capacity knee only {shift:.2f}x the unbatched one "
                 "(expected >= 1.5x)"
             )
+        write_bench_json(
+            "fleet_batching",
+            {
+                "knee_fps": KNEE_FPS,
+                "knees": knees,
+                "knee_shift": round(shift, 3),
+                "smoke": args.smoke,
+            },
+        )
 
 
 if __name__ == "__main__":

@@ -10,7 +10,10 @@ from repro.core import handmodel, objective
 from repro.core.camera import Camera
 from repro.kernels import ops, ref
 
-from benchmarks.common import time_fn
+try:
+    from benchmarks.common import time_fn
+except ModuleNotFoundError:  # run as a script: sys.path[0] is benchmarks/
+    from common import time_fn
 
 
 def bench() -> list:
@@ -111,3 +114,31 @@ def bench() -> list:
         f"bytes_per_s={raw_bytes / t_q:.2e};pack_ratio=0.25;interpret=True",
     ))
     return rows
+
+
+def main() -> None:
+    """Standalone entry: CSV to stdout + BENCH_kernel.json artifact.
+
+    The JSON mirrors the CSV rows (name, us_per_call, the derived
+    throughput string) so bench runs on two checkouts diff as data."""
+    try:
+        from benchmarks.common import emit, write_bench_json
+    except ModuleNotFoundError:
+        from common import emit, write_bench_json
+
+    rows = bench()
+    print("name,us_per_call,derived")
+    emit(rows)
+    write_bench_json(
+        "kernel",
+        {
+            "rows": [
+                {"name": n, "us_per_call": round(us, 2), "derived": d}
+                for n, us, d in rows
+            ]
+        },
+    )
+
+
+if __name__ == "__main__":
+    main()

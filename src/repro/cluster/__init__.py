@@ -5,8 +5,11 @@ asks how many such clients a shared pool of edge servers sustains.  See
 ``fleet.run_fleet`` / ``fleet.capacity_sweep`` for the front-end,
 ``events`` for the discrete-event engine, ``dispatch`` for edge
 selection policies, ``plancache`` for plan caching with drift-triggered
-incremental re-planning, and ``migration`` for mid-run client
-re-dispatch with hysteresis (live migration).
+incremental re-planning, ``migration`` for mid-run client re-dispatch
+with hysteresis (live migration), and ``fastfleet`` for the vectorized
+event engine (``run_fleet(engine="vector")``) that runs the same
+simulation event-for-event at a multiple of the object engine's
+throughput — the 10k-client sweep path.
 """
 
 from repro.cluster.dispatch import (  # noqa: F401
@@ -15,10 +18,15 @@ from repro.cluster.dispatch import (  # noqa: F401
     make_dispatch,
 )
 from repro.cluster.events import (  # noqa: F401
+    AdaptiveWindow,
     BatchingSlotServer,
     EventQueue,
     LinkTable,
     SlotServer,
+)
+from repro.cluster.fastfleet import (  # noqa: F401
+    ArrayLoopStats,
+    run_fleet_vectorized,
 )
 from repro.cluster.fleet import (  # noqa: F401
     ClientResult,

@@ -50,20 +50,28 @@ from repro.core.stages import StagedComputation
 
 
 def edge_subtopology(
-    topo: Topology, edge_name: str, link_table: Optional[LinkTable] = None
+    topo: Topology,
+    edge_name: str,
+    link_table: Optional[LinkTable] = None,
+    client_tier=None,
 ) -> Topology:
     """The two-tier view one client plans against: home + one edge.
 
     With ``link_table`` the link reflects current (possibly drifted)
     conditions, so re-planning calibrates against what the client will
-    actually experience.
+    actually experience.  ``client_tier`` substitutes a heterogeneous
+    client's own hardware for the star's default home tier (the hub
+    models *any one* client's vantage point; a weaker client plans —
+    and fingerprints — against its own silicon, so each hardware class
+    misses into its own plan-cache entries by construction).
     """
     link = topo.link_between(topo.home, edge_name)
     if link_table is not None:
         link = link_table.get(link.name)
+    home_tier = topo.tier(topo.home) if client_tier is None else client_tier
     return Topology(
         tiers={
-            topo.home: topo.tier(topo.home),
+            topo.home: home_tier,
             edge_name: topo.tier(edge_name),
         },
         links={(topo.home, edge_name): link},
@@ -86,6 +94,7 @@ class DispatchContext:
     assignments: Dict[str, int]  # edge -> clients currently assigned
     now: float = 0.0
     codec: object = None  # CodecModel the fleet's clients ship under
+    client_tier: object = None  # the asking client's own hardware (hetero)
 
 
 class RoundRobinDispatch:
@@ -118,7 +127,9 @@ class LatencyWeightedDispatch:
 
     def assign(self, client_id: int, ctx: DispatchContext) -> str:
         def predicted(edge: str) -> float:
-            sub = edge_subtopology(ctx.topo, edge, ctx.link_table)
+            sub = edge_subtopology(
+                ctx.topo, edge, ctx.link_table, client_tier=ctx.client_tier
+            )
             rep = offload.plan(
                 ctx.comp,
                 sub,

@@ -53,12 +53,19 @@ class _Event:
 
 
 class EventQueue:
-    """Deterministically ordered event heap with a simulated clock."""
+    """Deterministically ordered event heap with a simulated clock.
+
+    ``processed`` counts popped events — the denominator of the
+    events/sec throughput number ``fleet_bench --events`` reports, and
+    a structural invariant the vectorized engine must reproduce exactly
+    (same event count, not just same results).
+    """
 
     def __init__(self) -> None:
         self._heap: List[_Event] = []
         self._seq = 0
         self.now = 0.0
+        self.processed = 0
 
     def schedule(self, time: float, fn: Callable[[], None]) -> None:
         # clamp ulp-level rounding of canonical finish times (see
@@ -70,6 +77,7 @@ class EventQueue:
         while self._heap:
             ev = heapq.heappop(self._heap)
             self.now = ev.time
+            self.processed += 1
             ev.fn()
 
 
@@ -160,6 +168,41 @@ class SlotServer:
         return 0
 
 
+@dataclasses.dataclass(frozen=True)
+class AdaptiveWindow:
+    """Adaptive gather-window sizing for :class:`BatchingSlotServer`.
+
+    A fixed gather window is pure added latency when an edge is idle:
+    with one client per window there is nothing to fuse, yet every frame
+    still dwells the full window before launch.  The adaptive policy
+    sizes the window from a per-edge EWMA of observed inter-arrival
+    times: when requests arrive densely (EWMA <= ``idle_factor`` x the
+    configured window) fusing is profitable and the full window is
+    kept; when arrivals are sparser than that, a newly opening batch
+    serves immediately (window 0) — a batch of one, bit-for-bit the
+    FIFO path — instead of paying the window as dead time.
+
+    ``alpha`` — EWMA smoothing of each new inter-arrival sample.
+    ``idle_factor`` — density threshold in units of the configured
+    window (1.0: gather only while arrivals land inside one window).
+
+    Joining an already-open batch is unaffected (its close event is
+    scheduled); adaptivity only decides how long a *new* batch gathers.
+    ``adaptive=None`` on the server is the exact off-switch: the fixed
+    window is used unconditionally and no EWMA state is touched
+    (golden-tested in tests/test_batching.py).
+    """
+
+    alpha: float = 0.25
+    idle_factor: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not 0.0 < self.alpha <= 1.0:
+            raise ValueError("alpha must be in (0, 1]")
+        if self.idle_factor <= 0.0:
+            raise ValueError("idle_factor must be > 0")
+
+
 class BatchingSlotServer:
     """A slot server that fuses compatible requests into batch launches.
 
@@ -185,11 +228,15 @@ class BatchingSlotServer:
         queue: EventQueue,
         model: Optional[BatchServiceModel] = None,
         gather_window: float = 0.0,
+        adaptive: Optional[AdaptiveWindow] = None,
     ):
         self.name = name
         self.capacity = max(int(capacity), 1)
         self.model = model if model is not None else BatchServiceModel()
         self.gather_window = gather_window
+        self.adaptive = adaptive
+        self._ia_ewma: Optional[float] = None  # inter-arrival EWMA (adaptive)
+        self._prev_arrival: Optional[float] = None
         self._queue = queue
         self._slots = [0.0] * self.capacity  # slot free times (min-heap)
         heapq.heapify(self._slots)
@@ -236,21 +283,44 @@ class BatchingSlotServer:
             )
         self._last_admit = arrival
         self.admitted += 1
+        if self.adaptive is not None:
+            # per-edge inter-arrival EWMA; fed on every admission, read
+            # only when a NEW batch opens (joins are unaffected)
+            if self._prev_arrival is not None:
+                dt = arrival - self._prev_arrival
+                a = self.adaptive.alpha
+                self._ia_ewma = (
+                    dt
+                    if self._ia_ewma is None
+                    else a * dt + (1.0 - a) * self._ia_ewma
+                )
+            self._prev_arrival = arrival
         # the throttle applies per ADMISSION (same semantics as
         # SlotServer): an item submitted before a ServiceDrift keeps
         # its nominal time even if its batch closes after the drift
         service = service * self.service_scale
-        if self.gather_window <= 0.0:
-            self._serve(arrival, [(arrival, service, done)])
-        else:
-            items = self._open.get(key)
-            if items is None:
-                self._open[key] = items = []
-                self._queue.schedule(
-                    arrival + self.gather_window, lambda k=key: self._close(k)
-                )
+        items = self._open.get(key) if self.gather_window > 0.0 else None
+        if items is not None:
             items.append((arrival, service, done))
+        else:
+            window = self._effective_window()
+            if window <= 0.0:
+                self._serve(arrival, [(arrival, service, done)])
+            else:
+                self._open[key] = [(arrival, service, done)]
+                self._queue.schedule(
+                    arrival + window, lambda k=key: self._close(k)
+                )
         self.peak_load = max(self.peak_load, self.load(arrival))
+
+    def _effective_window(self) -> float:
+        """Gather window for a batch opening now: the configured window,
+        or 0 when adaptivity judges the edge too idle to fuse."""
+        if self.adaptive is None or self._ia_ewma is None:
+            return self.gather_window
+        if self._ia_ewma <= self.adaptive.idle_factor * self.gather_window:
+            return self.gather_window
+        return 0.0
 
     def _close(self, key) -> None:
         self._serve(self._queue.now, self._open.pop(key))
@@ -298,9 +368,18 @@ class LinkTable:
         self._links: Dict[str, Link] = {
             link.name: link for link in topo.links.values()
         }
+        # bumped on every mutation: lets the vectorized engine's sampler
+        # invalidate its pre-transformed latency blocks without
+        # comparing Link values per frame
+        self.version = 0
 
     def get(self, name: str) -> Link:
         return self._links[name]
+
+    def lookup(self, name: str) -> Optional[Link]:
+        """Like :meth:`get` but None for links outside the table (plan
+        legs can reference links the fleet topology does not carry)."""
+        return self._links.get(name)
 
     def set(
         self,
@@ -317,6 +396,7 @@ class LinkTable:
             jitter=old.jitter if jitter is None else jitter,
         )
         self._links[name] = new
+        self.version += 1
         return new
 
     def sample_plan_latency(

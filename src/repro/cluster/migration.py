@@ -316,6 +316,7 @@ class MigrationController:
         now: float,
         current: Optional[str] = None,
         codec=None,
+        client_tier=None,
     ) -> float:
         """What one frame would cost a client placed on ``edge`` now.
 
@@ -343,10 +344,15 @@ class MigrationController:
         link = self.link_table.get(
             self.topo.link_between(self.topo.home, edge).name
         )
-        memo_key = (edge, link, codec)
+        # client_tier joins the memo key: a heterogeneous fleet scores
+        # each hardware class against its own plans (frozen Tier values
+        # hash directly, like the frozen Link / CodecModel entries)
+        memo_key = (edge, link, codec, client_tier)
         cached = self._scores.get(memo_key)
         if cached is None:
-            sub = edge_subtopology(self.topo, edge, self.link_table)
+            sub = edge_subtopology(
+                self.topo, edge, self.link_table, client_tier=client_tier
+            )
             plan, _ = self.cache.get_or_plan(
                 self.comp,
                 sub,
@@ -440,6 +446,7 @@ class MigrationController:
         state_src: Optional[str] = None,
         force: bool = False,
         codec=None,
+        client_tier=None,
     ) -> Optional[Tuple[str, float]]:
         """Should ``client`` move off ``current``?  Returns ``(target,
         state_transfer_latency)`` and records the migration, or None.
@@ -449,7 +456,9 @@ class MigrationController:
         but never the improvement threshold: hysteresis still decides.
         ``codec`` is the asking client's live operating point: candidate
         plans and the state transfer are priced under it (None falls
-        back to the controller's fleet-level default).
+        back to the controller's fleet-level default).  ``client_tier``
+        is the asking client's own hardware class in a heterogeneous
+        fleet: candidate plans are priced against it.
         """
         if codec is None:
             codec = self.codec
@@ -463,6 +472,7 @@ class MigrationController:
             # hysteresis check uses (latency_weighted plans through it)
             self._ctx.now = now
             self._ctx.codec = codec
+            self._ctx.client_tier = client_tier
             orig = self.assignments.get(current, 0)
             self.assignments[current] = max(0, orig - 1)
             try:
@@ -471,11 +481,15 @@ class MigrationController:
                 self.assignments[current] = orig
             if target == current:
                 return None
-            cur_t = self.predicted_frame_time(current, now, current, codec)
-            new_t = self.predicted_frame_time(target, now, current, codec)
+            cur_t = self.predicted_frame_time(
+                current, now, current, codec, client_tier
+            )
+            new_t = self.predicted_frame_time(
+                target, now, current, codec, client_tier
+            )
         else:
             times = {
-                e: self.predicted_frame_time(e, now, current, codec)
+                e: self.predicted_frame_time(e, now, current, codec, client_tier)
                 for e in self.edges
             }
             target = min(self.edges, key=lambda e: (times[e], e))

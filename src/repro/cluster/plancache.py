@@ -25,6 +25,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import weakref
 from typing import Deque, Dict, Optional, Tuple
 
 from repro.core import offload
@@ -50,6 +51,29 @@ def comp_signature(comp: StagedComputation) -> Tuple:
         ),
         comp.results,
     )
+
+
+# id-indexed memo for comp_signature: the fleet calls PlanCache.key with
+# the SAME StagedComputation object millions of times (every replan,
+# every migration probe), and walking the stage tuples each time
+# dominates the lookup.  Keyed by id() with a weakref guard so a
+# recycled id can never alias a dead computation's signature.
+_SIG_MEMO: Dict[int, Tuple[object, Tuple]] = {}
+
+
+def cached_comp_signature(comp: StagedComputation) -> Tuple:
+    """``comp_signature`` with an id-indexed fast path for repeat calls
+    on the same live object (the fleet hot loop's case)."""
+    entry = _SIG_MEMO.get(id(comp))
+    if entry is not None and entry[0]() is comp:
+        return entry[1]
+    sig = comp_signature(comp)
+    try:
+        ref = weakref.ref(comp)
+    except TypeError:
+        return sig
+    _SIG_MEMO[id(comp)] = (ref, sig)
+    return sig
 
 
 def topology_fingerprint(topo: Topology) -> Tuple:
@@ -124,7 +148,7 @@ class PlanCache:
         # the same point share one plan and a rate-controller switch is
         # a miss by construction
         return (
-            comp_signature(comp),
+            cached_comp_signature(comp),
             topology_fingerprint(topo),
             policy.value,
             planner,

@@ -60,9 +60,16 @@ class LoopStats:
         gaps = [e.gap for e in self.processed[1:]]
         return sum(gaps) / len(gaps) if gaps else 1.0
 
+    def loop_times(self) -> List[float]:
+        """Per-processed-frame loop times (finish - start).  A method
+        rather than inline comprehensions at the call sites so array-
+        backed stats (``fastfleet.ArrayLoopStats``) can compute them
+        without materializing ``FrameEvent`` objects."""
+        return [e.finish - e.start for e in self.processed]
+
     @property
     def mean_loop_time(self) -> float:
-        times = [e.finish - e.start for e in self.processed]
+        times = self.loop_times()
         return sum(times) / len(times) if times else 0.0
 
     @property

@@ -113,6 +113,45 @@ THIN_CLIENT_NO_GPU = Tier(
     has_accelerator=False,
 )
 
+# --- heterogeneous client classes (fleet-scale sweeps) ---------------------
+#
+# A large fleet is never uniform: the embedded-CNN hand-pose line of
+# work runs the tracker on phone NPUs and Jetson-class boards, while the
+# weakest devices are the paper's GPU-less thin clients.  These tiers
+# ladder from "must offload everything" to "offloads only under a fast
+# link"; a fleet mixing them exercises per-class planning (each class
+# fingerprints into its own plan-cache entries) and class-aware dispatch.
+
+# A phone-class NPU: enough for preprocessing, far from a full swarm.
+PHONE_NPU = Tier(
+    name="phone_npu",
+    accel_flops=40e9,
+    scalar_flops=12e9,
+    dispatch_overhead=150e-6,
+)
+
+# A Jetson-class embedded GPU: runs the tracker locally below realtime.
+EMBEDDED_GPU = Tier(
+    name="embedded_gpu",
+    accel_flops=120e9,
+    scalar_flops=16e9,
+    dispatch_overhead=60e-6,
+)
+
+# A laptop integrated GPU — the strongest client class; roughly the
+# regime of the paper's laptop (local tracking at ~1/2 realtime).
+LAPTOP_IGPU = Tier(
+    name="laptop_igpu",
+    accel_flops=300e9,
+    scalar_flops=30e9,
+    dispatch_overhead=50e-6,
+)
+
+# The default heterogeneous mix, weakest first; ``run_fleet`` assigns
+# client c the class at index c % len(classes), so every class is
+# uniformly represented at any fleet size.
+CLIENT_CLASSES = (THIN_CLIENT_NO_GPU, PHONE_NPU, EMBEDDED_GPU, LAPTOP_IGPU)
+
 
 def paper_environment(
     network: str = "gigabit_ethernet", wrapped: bool = True
@@ -269,6 +308,31 @@ def fleet_star(
             jni_bandwidth=8e9,
         ),
     )
+
+
+def hetero_fleet_star(
+    num_edges: int = 64,
+    edge_capacity: int = 8,
+    client_classes=CLIENT_CLASSES,
+    base_link: Link = links.FIVE_G_EDGE,
+    batching: bool = False,
+):
+    """A :func:`fleet_star` sized for 10k-client open-loop sweeps, plus
+    the heterogeneous client-class mix to run against it.
+
+    Returns ``(topo, client_classes)`` — pass the classes straight to
+    ``run_fleet(client_classes=...)`` / ``capacity_sweep``.  The star's
+    nominal home tier is the weakest class (the vantage-point hub);
+    each client plans against its own class via the per-client home-
+    tier substitution in ``dispatch.edge_subtopology``."""
+    topo = fleet_star(
+        num_edges=num_edges,
+        edge_capacity=edge_capacity,
+        client_tier=client_classes[0],
+        base_link=base_link,
+        batching=batching,
+    )
+    return topo, tuple(client_classes)
 
 
 def hotspot_star(

@@ -22,6 +22,7 @@ import pytest
 from repro.cluster import run_fleet
 from repro.cluster.dispatch import DispatchContext, make_dispatch
 from repro.cluster.events import (
+    AdaptiveWindow,
     BatchingSlotServer,
     EventQueue,
     LinkTable,
@@ -417,3 +418,112 @@ def test_event_queue_breaks_ties_by_schedule_order_even_when_nested():
     q.schedule(0.25, lambda: out.append("late"))
     q.run()
     assert out[-1] == "late" and q.now == 1.0
+
+
+# ---------------------------------------------------------------------------
+# adaptive gather windows (AdaptiveWindow)
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_window_validates_its_parameters():
+    with pytest.raises(ValueError):
+        AdaptiveWindow(alpha=0.0)
+    with pytest.raises(ValueError):
+        AdaptiveWindow(alpha=1.2)
+    with pytest.raises(ValueError):
+        AdaptiveWindow(idle_factor=0.0)
+    AdaptiveWindow(alpha=1.0, idle_factor=2.5)  # boundary values are legal
+
+
+def test_adaptive_dense_arrivals_reproduce_the_fixed_window():
+    """Arrivals landing well inside one window keep the EWMA below the
+    idle threshold, so the adaptive server gathers exactly like the
+    fixed-window one — event for event, stat for stat."""
+    window = 10e-3
+    qa, qf = EventQueue(), EventQueue()
+    model = BatchServiceModel(launch_overhead=1e-3, marginal_fraction=0.25)
+    fixed = BatchingSlotServer(
+        "e", capacity=2, queue=qf, model=model, gather_window=window
+    )
+    adapt = BatchingSlotServer(
+        "e", capacity=2, queue=qa, model=model, gather_window=window,
+        adaptive=AdaptiveWindow(alpha=0.25, idle_factor=1.0),
+    )
+    schedule = [(i * 2e-3, 5e-3) for i in range(12)]  # 2 ms apart
+    got_f, got_a = [], []
+    for srv, q, got in ((fixed, qf, got_f), (adapt, qa, got_a)):
+        for arrival, service in schedule:
+            q.schedule(
+                arrival,
+                lambda a=arrival, s=service, sv=srv, g=got: sv.submit(
+                    a, s, lambda st, fi, g=g: g.append((st, fi))
+                ),
+            )
+        q.run()
+    assert got_a == got_f
+    assert adapt.batches == fixed.batches
+    assert adapt.busy_time == fixed.busy_time
+    assert adapt.total_wait == fixed.total_wait
+
+
+def test_adaptive_sparse_arrivals_serve_immediately():
+    """Arrivals far sparser than the window drive the EWMA over the
+    idle threshold: new batches serve as batches of one with NO window
+    dwell, so every member finishes earlier than under the fixed
+    window, and no fusing ever happens."""
+    window = 10e-3
+    gap = 100e-3  # 10x the window: unambiguously idle
+    qa, qf = EventQueue(), EventQueue()
+    model = BatchServiceModel(launch_overhead=1e-3, marginal_fraction=0.25)
+    fixed = BatchingSlotServer(
+        "e", capacity=2, queue=qf, model=model, gather_window=window
+    )
+    adapt = BatchingSlotServer(
+        "e", capacity=2, queue=qa, model=model, gather_window=window,
+        adaptive=AdaptiveWindow(alpha=0.25, idle_factor=1.0),
+    )
+    schedule = [(i * gap, 5e-3) for i in range(6)]
+    got_f, got_a = [], []
+    for srv, q, got in ((fixed, qf, got_f), (adapt, qa, got_a)):
+        for arrival, service in schedule:
+            q.schedule(
+                arrival,
+                lambda a=arrival, s=service, sv=srv, g=got: sv.submit(
+                    a, s, lambda st, fi, g=g: g.append((st, fi))
+                ),
+            )
+        q.run()
+    assert adapt.batches == fixed.batches == len(schedule)
+    # the very first submission has no inter-arrival sample yet, so it
+    # still gathers the full window; every later one serves on arrival
+    assert got_a[0] == got_f[0]
+    for (sa, fa), (sf, ff), (arrival, _svc) in zip(
+        got_a[1:], got_f[1:], schedule[1:]
+    ):
+        assert sa == arrival  # no dwell
+        assert sf == arrival + window  # fixed window always dwells
+        assert fa < ff
+
+
+def test_adaptive_none_is_the_exact_off_switch():
+    """``adaptive_window=None`` at the fleet level must reproduce the
+    fixed-window batching fleet bit for bit — the golden off-switch —
+    while an armed AdaptiveWindow on the same sparse-ish fleet is a
+    real knob (it changes the event history)."""
+    comp = hardware.paper_staged()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2, batching=True)
+    kwargs = dict(num_frames=60, seed=5, gather_window=2e-3)
+    base = run_fleet(topo, comp, 6, **kwargs)
+    off = run_fleet(topo, comp, 6, adaptive_window=None, **kwargs)
+    for a, b in zip(base.clients, off.clients):
+        assert a.stats.processed == b.stats.processed
+        assert a.stats.duration == b.stats.duration
+        assert a.total_wait == b.total_wait
+    assert [e.admitted for e in base.edges] == [e.admitted for e in off.edges]
+    assert [e.batches for e in base.edges] == [e.batches for e in off.edges]
+    armed = run_fleet(
+        topo, comp, 6,
+        adaptive_window=AdaptiveWindow(alpha=0.25, idle_factor=1.0),
+        **kwargs,
+    )
+    assert armed.clients != base.clients

@@ -1,0 +1,252 @@
+"""Object vs vectorized fleet engine: event-for-event equivalence.
+
+The vectorized engine (``repro.cluster.fastfleet``) is a performance
+rewrite of ``fleet.run_fleet``'s object event loop — packed-payload
+heap, struct-of-arrays client state, inline FIFO admission, block-drawn
+RNG, precomputed drift decisions.  None of that is allowed to change a
+single simulated event: these tests assert the two engines produce
+identical results — full ``FrameEvent`` streams, per-edge admission and
+wait stats, plan-cache counters, migration records, codec operating
+points, and the total processed-event count — on every feature
+combination (golden configs) and on randomized small fleets with
+batching + migration + codec armed at once (property tests via
+hypothesis, or the deterministic conftest shim when it is absent).
+
+Float equality throughout is EXACT (``==``, not approx): the vectorized
+engine is built from value-equivalent transformations (heapreplace for
+pop+push, block-transformed normals, margin-guarded prefix-sum drift
+decisions with exact fallback), so bit-for-bit agreement is the
+contract, not a lucky outcome.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import MigrationConfig, PlanCache, run_fleet
+from repro.cluster.events import AdaptiveWindow
+from repro.cluster.fastfleet import ArrayLoopStats
+from repro.cluster.fleet import LinkDrift, ServiceDrift
+from repro.codec import rate as crate
+from repro.sim import hardware
+from repro.sim.clock import FrameEvent
+
+
+def _run_both(**kwargs):
+    ro = run_fleet(engine="object", cache=PlanCache(), **kwargs)
+    rv = run_fleet(engine="vector", cache=PlanCache(), **kwargs)
+    return ro, rv
+
+
+def _assert_equivalent(ro, rv):
+    assert ro.events == rv.events
+    assert ro.duration == rv.duration
+    assert len(ro.clients) == len(rv.clients)
+    for co, cv in zip(ro.clients, rv.clients):
+        assert co.edge == cv.edge
+        assert co.replans == cv.replans
+        assert co.migrations == cv.migrations
+        assert co.total_wait == cv.total_wait
+        assert co.rate_changes == cv.rate_changes
+        eo, ev = co.stats.processed, cv.stats.processed
+        assert len(eo) == len(ev)
+        for a, b in zip(eo, ev):
+            assert (a.index, a.arrival, a.start, a.finish, a.gap) == (
+                b.index, b.arrival, b.start, b.finish, b.gap,
+            )
+        assert co.stats.duration == cv.stats.duration
+        if co.codec is not None or cv.codec is not None:
+            assert co.codec == cv.codec
+    for lo, lv in zip(ro.edges, rv.edges):
+        for f in (
+            "name", "capacity", "clients", "admitted", "busy_time",
+            "mean_wait", "batches", "mean_batch_size", "peak_load",
+        ):
+            assert getattr(lo, f) == getattr(lv, f), (lo.name, f)
+    for f in ("hits", "misses", "invalidations"):
+        assert getattr(ro.cache.stats, f) == getattr(rv.cache.stats, f), f
+    assert (ro.migration is None) == (rv.migration is None)
+    if ro.migration is not None:
+        assert ro.migration.count == rv.migration.count
+        assert ro.migration.considered == rv.migration.considered
+        assert [
+            (r.client, r.src, r.dst, r.time) for r in ro.migration.records
+        ] == [(r.client, r.src, r.dst, r.time) for r in rv.migration.records]
+
+
+_COMP = hardware.paper_staged()
+_DRIFTS = (
+    LinkDrift(time=0.3, link="5g_edge_0", latency=0.05, jitter=0.01),
+    ServiceDrift(time=0.6, edge="edge_1", factor=2.5),
+    LinkDrift(time=0.9, link="5g_edge_0", latency=0.004, jitter=0.0015),
+)
+
+
+def _golden_configs():
+    topo = hardware.fleet_star(num_edges=3, edge_capacity=2)
+    btopo = hardware.fleet_star(num_edges=3, edge_capacity=2, batching=True)
+    het_topo, het_classes = hardware.hetero_fleet_star(
+        num_edges=3, edge_capacity=2
+    )
+    return {
+        "plain": dict(topo=topo, comp=_COMP, num_clients=9, num_frames=40),
+        "batching": dict(
+            topo=btopo, comp=_COMP, num_clients=9, num_frames=40,
+            gather_window=3e-3,
+        ),
+        "adaptive": dict(
+            topo=btopo, comp=_COMP, num_clients=7, num_frames=40,
+            gather_window=3e-3,
+            adaptive_window=AdaptiveWindow(alpha=0.3, idle_factor=1.5),
+        ),
+        "migration": dict(
+            topo=hardware.hotspot_star(), comp=_COMP, num_clients=8,
+            num_frames=45, dispatch="least_queue",
+            migration=MigrationConfig(),
+        ),
+        "codec": dict(
+            topo=topo, comp=_COMP, num_clients=6, num_frames=40,
+            codec=crate.CodecConfig(base=hardware.codec_point()),
+        ),
+        "drift": dict(
+            topo=topo, comp=_COMP, num_clients=8, num_frames=60,
+            drifts=list(_DRIFTS), drift_window=12, drift_min_samples=5,
+        ),
+        "hetero": dict(
+            topo=het_topo, comp=_COMP, num_clients=9, num_frames=40,
+            client_classes=het_classes,
+        ),
+        "everything": dict(
+            topo=het_topo, comp=_COMP, num_clients=10, num_frames=50,
+            dispatch="least_queue", client_classes=het_classes,
+            batching=True, gather_window=2e-3,
+            migration=MigrationConfig(),
+            codec=crate.CodecConfig(base=hardware.codec_point()),
+            drifts=[LinkDrift(
+                time=0.4, link="5g_edge_0", latency=0.06, jitter=0.012
+            )],
+        ),
+    }
+
+
+_CONFIGS = _golden_configs()
+
+
+@pytest.mark.parametrize("name", sorted(_CONFIGS))
+def test_engines_identical_on_golden_config(name):
+    ro, rv = _run_both(**_CONFIGS[name])
+    _assert_equivalent(ro, rv)
+    assert ro.events > 0  # the golden is not vacuous
+
+
+def test_vector_engine_is_seed_stable():
+    kw = _CONFIGS["everything"]
+    a = run_fleet(engine="vector", cache=PlanCache(), **kw)
+    b = run_fleet(engine="vector", cache=PlanCache(), **kw)
+    for ca, cb in zip(a.clients, b.clients):
+        assert ca.stats.processed == cb.stats.processed
+    assert a.events == b.events
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=9),  # num_clients
+    st.integers(min_value=25, max_value=45),  # num_frames
+    st.integers(min_value=0, max_value=5),  # seed
+    st.sampled_from([1e-3, 2e-3, 3e-3]),  # gather_window
+    st.sampled_from([False, True]),  # with_drift
+)
+def test_engines_identical_on_random_fleets_with_everything_armed(
+    num_clients, num_frames, seed, gather_window, with_drift
+):
+    """Randomized small fleets with batching + migration + codec armed
+    simultaneously (plus sometimes mid-run drift): the regime where the
+    vectorized fast paths interleave with every object subsystem."""
+    het_topo, het_classes = hardware.hetero_fleet_star(
+        num_edges=3, edge_capacity=2
+    )
+    ro, rv = _run_both(
+        topo=het_topo,
+        comp=_COMP,
+        num_clients=num_clients,
+        num_frames=num_frames,
+        seed=seed,
+        dispatch="least_queue",
+        client_classes=het_classes,
+        batching=True,
+        gather_window=gather_window,
+        migration=MigrationConfig(),
+        codec=crate.CodecConfig(base=hardware.codec_point()),
+        drifts=list(_DRIFTS) if with_drift else (),
+        drift_window=10,
+        drift_min_samples=4,
+    )
+    _assert_equivalent(ro, rv)
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=10),  # num_clients
+    st.integers(min_value=3, max_value=20),  # drift_window
+    st.integers(min_value=0, max_value=3),  # seed
+)
+def test_engines_identical_under_randomized_drift_detection(
+    num_clients, drift_window, seed
+):
+    """Drift detection is the one subsystem the vectorized engine
+    *re-implements* (prefix-sum decisions + margin-guarded exact
+    fallback) rather than reuses — hammer it across window lengths."""
+    topo = hardware.fleet_star(num_edges=3, edge_capacity=2)
+    ro, rv = _run_both(
+        topo=topo,
+        comp=_COMP,
+        num_clients=num_clients,
+        num_frames=50,
+        seed=seed,
+        drifts=list(_DRIFTS),
+        drift_window=drift_window,
+        drift_min_samples=max(2, drift_window // 3),
+    )
+    _assert_equivalent(ro, rv)
+
+
+# ---------------------------------------------------------------------------
+# ArrayLoopStats: the vectorized engine's lazy LoopStats stand-in
+# ---------------------------------------------------------------------------
+
+
+def test_array_loop_stats_materializes_lazily_and_exactly():
+    from array import array
+
+    period = 1.0 / 30.0
+    idx = array("q", [0, 1, 3, 4])
+    start = array("d", [0.0, 0.04, 0.11, 0.15])
+    finish = array("d", [0.035, 0.10, 0.145, 0.19])
+    stats = ArrayLoopStats(idx, start, finish, total_frames=6, period=period)
+    assert stats._events is None  # nothing materialized yet
+    assert stats.duration == finish[-1]
+    assert stats.dropped == 2
+    assert stats.drop_rate == 2 / 6
+    assert stats.loop_times() == [f - s for s, f in zip(start, finish)]
+    events = stats.processed
+    assert stats._events is events  # cached after first read
+    assert events == [
+        FrameEvent(0, 0 * period, 0.0, 0.035, 1),
+        FrameEvent(1, 1 * period, 0.04, 0.10, 1),
+        FrameEvent(3, 3 * period, 0.11, 0.145, 2),
+        FrameEvent(4, 4 * period, 0.15, 0.19, 1),
+    ]
+    # telescoped mean gap == naive mean over per-event gaps
+    assert stats.mean_gap == sum(e.gap for e in events[1:]) / 3
+
+
+def test_array_loop_stats_empty_run():
+    from array import array
+
+    stats = ArrayLoopStats(
+        array("q"), array("d"), array("d"), total_frames=0, period=1 / 30
+    )
+    assert stats.processed == []
+    assert stats.duration == 0.0
+    assert stats.achieved_fps == 0.0
+    assert stats.mean_gap == 1.0
+    assert stats.mean_loop_time == 0.0
