@@ -4,6 +4,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import time
 from typing import Callable, Iterable, Tuple
 
@@ -14,11 +15,36 @@ Row = Tuple[str, float, str]  # (name, us_per_call, derived)
 # knees / events-per-second / p99 numbers instead of scraping CSV
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+# bumped whenever the stamped envelope (not a specific bench's payload)
+# changes shape; benchmarks/validate_bench.py checks it on every artifact
+SCHEMA_VERSION = 1
+
+
+def _git_rev() -> str:
+    """Short git revision of the working tree, or "unknown" outside a
+    checkout (artifact provenance only — never load-bearing)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+        rev = out.stdout.strip()
+        return rev if out.returncode == 0 and rev else "unknown"
+    except Exception:
+        return "unknown"
+
 
 def write_bench_json(name: str, payload: dict) -> pathlib.Path:
-    """Dump ``payload`` to ``BENCH_<name>.json`` at the repo root."""
+    """Dump ``payload`` to ``BENCH_<name>.json`` at the repo root,
+    stamped with the artifact schema version and the emitting git rev."""
+    doc = dict(payload)
+    doc["schema_version"] = SCHEMA_VERSION
+    doc["git_rev"] = _git_rev()
     path = REPO_ROOT / f"BENCH_{name}.json"
-    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
     print(f"# wrote {path.name}")
     return path
 

@@ -53,6 +53,19 @@ the service-bound regime fused batching absorbs.  CI asserts the
 25 fps capacity knee lands at >= 1.5x the raw client count, and that
 the *identity* codec reproduces the raw fleet event-for-event (the
 golden off-switch).
+
+``--trace`` is the telemetry latency-attribution report: the
+everything-armed hetero star (heterogeneous classes + batching +
+migration + codec + mid-run drift) run on BOTH engines with a
+``Telemetry`` object attached.  It hard-asserts the two engines emit
+byte-identical telemetry (frame spans, metric snapshots), verifies
+every frame's span fold equals its loop time exactly, exports the
+Chrome trace-event JSON to ``fleet_trace.json`` (gitignored — load it
+in Perfetto or chrome://tracing), prints the per-class attribution
+table, and writes ``BENCH_fleet_trace.json``.  The ``--events`` sweep
+additionally times a telemetry-armed vector arm so enabled-path
+overhead shows up in the artifact; the unchanged 2x speedup gate on
+the untraced arm is what proves the disabled hooks cost nothing.
 """
 
 from __future__ import annotations
@@ -61,16 +74,24 @@ import argparse
 import json
 import time
 
-from repro.cluster import MigrationConfig, PlanCache, capacity_sweep, run_fleet
+from repro.cluster import (
+    MigrationConfig,
+    PlanCache,
+    Telemetry,
+    capacity_sweep,
+    run_fleet,
+)
+from repro.cluster.fleet import LinkDrift
+from repro.cluster.telemetry import SPAN_ORDER, _pctile as _tel_pctile
 from repro.codec import CodecConfig, identity_config, sequence_motion
 from repro.core.offload import Policy
 from repro.net import links
 from repro.sim import hardware
 
 try:
-    from benchmarks.common import write_bench_json
+    from benchmarks.common import REPO_ROOT, write_bench_json
 except ModuleNotFoundError:  # run as a script: sys.path[0] is benchmarks/
-    from common import write_bench_json
+    from common import REPO_ROOT, write_bench_json
 
 # the paper's "real-time" bar for the knee: 25 fps (Fig. 3 discussion —
 # below this the gap distribution visibly degrades tracking)
@@ -438,6 +459,44 @@ def _events_rows(shapes, reps: int = EVENTS_BENCH_REPS) -> tuple:
             0.0,
             f"speedup={ratio:.2f}x;gate={EVENTS_MIN_SPEEDUP:.1f}x",
         ))
+        # third arm: the vectorized engine with telemetry ARMED.  Not
+        # part of the speedup gate — the gate (unchanged since the
+        # engine landed) is what proves the telemetry=None hooks cost
+        # nothing — but the enabled-path cost is worth a number in the
+        # artifact so a regression shows up in the diff, and the event
+        # count must still match exactly (telemetry observes the
+        # simulation, it must never perturb it).
+        best_tel = float("inf")
+        for _ in range(reps):
+            cache = PlanCache()
+            t0 = time.perf_counter()
+            r = run_fleet(
+                topo,
+                comp,
+                num_clients=num_clients,
+                num_frames=num_frames,
+                policy=Policy.AUTO,
+                cache=cache,
+                engine="vector",
+                telemetry=Telemetry(),
+            )
+            dt = time.perf_counter() - t0
+            best_tel = min(best_tel, dt)
+            if r.events != ev_v:
+                raise SystemExit(
+                    f"telemetry changed the vector event stream at "
+                    f"{num_clients} clients ({r.events} vs {ev_v}) — "
+                    "observation must never perturb the simulation"
+                )
+        overhead = (best_tel / t_v - 1.0) * 100.0
+        point["vector_telemetry_events_per_s"] = round(ev_v / best_tel, 1)
+        point["telemetry_overhead_pct"] = round(overhead, 1)
+        rows.append((
+            f"fleet/events_vector_telemetry_n{num_clients}",
+            best_tel / ev_v * 1e6,
+            f"events={ev_v};events_per_s={ev_v / best_tel:.3e};"
+            f"overhead={overhead:.1f}%;reps={reps}",
+        ))
     return rows, points
 
 
@@ -522,6 +581,95 @@ def _scale_rows(client_counts, num_frames) -> tuple:
     return rows, summary
 
 
+def _trace_rows(smoke: bool) -> tuple:
+    """Latency-attribution trace on the everything-armed hetero star.
+
+    Runs BOTH engines with telemetry armed on the same workload
+    (heterogeneous classes + batching + migration + codec + mid-run
+    drift) and hard-asserts byte-identical telemetry — frame spans,
+    metric snapshots, occupancy timelines — before reporting anything.
+    The attribution numbers are only trustworthy while the engines
+    agree on every span.  Exports the Chrome trace to
+    ``fleet_trace.json`` (gitignored; load in ``chrome://tracing`` or
+    Perfetto) and prints the per-class attribution table.
+    """
+    comp = hardware.paper_staged()
+    topo, classes = hardware.hetero_fleet_star(num_edges=3, edge_capacity=2)
+    num_clients = 8 if smoke else 16
+    num_frames = 80 if smoke else 300
+    kw = dict(
+        topo=topo,
+        comp=comp,
+        num_clients=num_clients,
+        num_frames=num_frames,
+        dispatch="least_queue",
+        client_classes=classes,
+        batching=True,
+        gather_window=2e-3,
+        migration=MigrationConfig(),
+        codec=CodecConfig(base=hardware.codec_point()),
+        drifts=[
+            LinkDrift(time=0.4, link="5g_edge_0", latency=0.06, jitter=0.012)
+        ],
+    )
+    tels = {}
+    for eng in ("object", "vector"):
+        tel = Telemetry()
+        run_fleet(engine=eng, cache=PlanCache(), telemetry=tel, **kw)
+        tels[eng] = tel
+    tel_o, tel_v = tels["object"], tels["vector"]
+    if tel_o.frames != tel_v.frames:
+        raise SystemExit(
+            "engines disagree on frame spans — telemetry must be "
+            "byte-identical across engines"
+        )
+    if tel_o.metrics.snapshot() != tel_v.metrics.snapshot():
+        raise SystemExit(
+            "engines disagree on metric snapshots — telemetry must be "
+            "byte-identical across engines"
+        )
+    checked = tel_v.verify_exact()
+    doc = tel_v.export_chrome_trace(str(REPO_ROOT / "fleet_trace.json"))
+    trace_events = doc["traceEvents"]
+    print(f"# wrote fleet_trace.json ({len(trace_events)} trace events)")
+
+    totals = {name: 0.0 for name in SPAN_ORDER}
+    loops = []
+    for (_c, _cls, _edge, _i, start, fin, spans) in tel_v.frames:
+        loops.append(fin - start)
+        for name, d in zip(SPAN_ORDER, spans):
+            totals[name] += d
+    loops.sort()
+    nf = len(loops)
+    p50 = _tel_pctile(loops, 0.50)
+    p99 = _tel_pctile(loops, 0.99)
+    rows = []
+    total_loop = sum(loops)
+    for name in SPAN_ORDER:
+        rows.append((
+            f"fleet/trace_span_{name}",
+            totals[name] / nf * 1e6,
+            f"share={totals[name] / total_loop:.3f}",
+        ))
+    rows.append((
+        "fleet/trace_loop",
+        total_loop / nf * 1e6,
+        f"frames={nf};p50_ms={p50 * 1e3:.2f};p99_ms={p99 * 1e3:.2f}",
+    ))
+    summary = {
+        "engine": "both",
+        "clients": num_clients,
+        "frames": num_frames,
+        "checked_frames": checked,
+        "trace_events": len(trace_events),
+        "loop_p50_ms": round(p50 * 1e3, 3),
+        "loop_p99_ms": round(p99 * 1e3, 3),
+        "spans": {name: round(totals[name], 6) for name in SPAN_ORDER},
+        "smoke": smoke,
+    }
+    return rows, summary, tel_v.format_attribution_table()
+
+
 def bench() -> list:
     return _sweep_rows((1, 2, 4, 8, 16, 32), num_frames=300)
 
@@ -566,6 +714,14 @@ def main() -> None:
         "vectorized engine (1k in --smoke); writes BENCH_fleet_scale.json",
     )
     ap.add_argument(
+        "--trace",
+        action="store_true",
+        help="run the everything-armed hetero star on BOTH engines with "
+        "telemetry, assert byte-identical spans/metrics, export the "
+        "Chrome trace to fleet_trace.json, and print the per-class "
+        "latency-attribution table",
+    )
+    ap.add_argument(
         "--grid",
         action="store_true",
         help="with --migration: emit a weak-factor x client-count JSON "
@@ -592,7 +748,9 @@ def main() -> None:
         )
         print(json.dumps(grid, indent=2))
         return
-    if args.events:
+    if args.trace:
+        rows, trace_summary, att_table = _trace_rows(args.smoke)
+    elif args.events:
         shapes = EVENTS_SHAPES[:1] if args.smoke else EVENTS_SHAPES
         rows, ev_points = _events_rows(shapes)
     elif args.scale:
@@ -643,6 +801,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.trace:
+        print(att_table)
+        write_bench_json("fleet_trace", trace_summary)
+        return
     if args.events:
         _assert_events_gate(ev_points)
         write_bench_json(

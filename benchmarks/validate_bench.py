@@ -1,0 +1,105 @@
+"""Validate BENCH_*.json artifacts against benchmarks/bench_schema.json.
+
+Usage::
+
+    python benchmarks/validate_bench.py [BENCH_foo.json ...]
+
+With no arguments, validates every ``BENCH_*.json`` at the repo root.
+Exits nonzero on the first structural problem, printing every finding —
+the CI step that keeps emitted artifacts honest against the checked-in
+schema (hand-rolled: the container has no jsonschema dependency, and
+the spec language we need is a dozen lines).
+
+Spec language (see bench_schema.json): a spec is a type name (``int``,
+``num``, ``str``, ``bool``, ``dict``, ``list``; a ``?`` suffix marks
+the key optional), a nested object listing the required keys of a dict
+(extra keys are allowed), or a one-element list whose inner spec every
+element must match.  The ``common`` spec applies to every artifact;
+``files`` adds per-artifact requirements keyed by the ``<name>`` in
+``BENCH_<name>.json`` (unknown names validate against ``common`` only).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import List
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCHEMA_PATH = pathlib.Path(__file__).resolve().parent / "bench_schema.json"
+
+_TYPES = {
+    "int": lambda v: isinstance(v, int) and not isinstance(v, bool),
+    "num": lambda v: isinstance(v, (int, float)) and not isinstance(v, bool),
+    "str": lambda v: isinstance(v, str),
+    "bool": lambda v: isinstance(v, bool),
+    "dict": lambda v: isinstance(v, dict),
+    "list": lambda v: isinstance(v, list),
+}
+
+
+def _check(value, spec, path: str, errors: List[str]) -> None:
+    if isinstance(spec, str):
+        tname = spec[:-1] if spec.endswith("?") else spec
+        if not _TYPES[tname](value):
+            errors.append(f"{path}: expected {tname}, got {type(value).__name__}")
+    elif isinstance(spec, dict):
+        if not isinstance(value, dict):
+            errors.append(f"{path}: expected object, got {type(value).__name__}")
+            return
+        for key, sub in spec.items():
+            if key.startswith("_"):
+                continue  # schema-file comments
+            optional = isinstance(sub, str) and sub.endswith("?")
+            if key not in value:
+                if not optional:
+                    errors.append(f"{path}.{key}: missing required key")
+                continue
+            _check(value[key], sub, f"{path}.{key}", errors)
+    elif isinstance(spec, list):
+        if not isinstance(value, list):
+            errors.append(f"{path}: expected array, got {type(value).__name__}")
+            return
+        for i, item in enumerate(value):
+            _check(item, spec[0], f"{path}[{i}]", errors)
+    else:  # pragma: no cover - schema-authoring error
+        errors.append(f"{path}: unsupported spec {spec!r}")
+
+
+def validate_file(path: pathlib.Path, schema: dict) -> List[str]:
+    errors: List[str] = []
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as exc:
+        return [f"{path.name}: unreadable ({exc})"]
+    name = path.name[len("BENCH_") : -len(".json")]
+    spec = dict(schema.get("common", {}))
+    spec.update(schema.get("files", {}).get(name, {}))
+    _check(doc, spec, path.name, errors)
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    schema = json.loads(SCHEMA_PATH.read_text())
+    if argv:
+        paths = [pathlib.Path(a) for a in argv]
+    else:
+        paths = sorted(REPO_ROOT.glob("BENCH_*.json"))
+    if not paths:
+        print("validate_bench: no BENCH_*.json artifacts found", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        errors = validate_file(path, schema)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(f"FAIL {e}", file=sys.stderr)
+        else:
+            print(f"ok   {path.name}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,7 +9,9 @@ incremental re-planning, ``migration`` for mid-run client re-dispatch
 with hysteresis (live migration), and ``fastfleet`` for the vectorized
 event engine (``run_fleet(engine="vector")``) that runs the same
 simulation event-for-event at a multiple of the object engine's
-throughput — the 10k-client sweep path.
+throughput — the 10k-client sweep path, and ``telemetry`` for the
+opt-in observability layer (per-frame span traces, metrics registry,
+latency attribution) both engines feed identically.
 """
 
 from repro.cluster.dispatch import (  # noqa: F401
@@ -49,4 +51,9 @@ from repro.cluster.plancache import (  # noqa: F401
     PlanCache,
     comp_signature,
     topology_fingerprint,
+)
+from repro.cluster.telemetry import (  # noqa: F401
+    SPAN_ORDER,
+    MetricsRegistry,
+    Telemetry,
 )

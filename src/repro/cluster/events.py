@@ -103,6 +103,10 @@ class SlotServer:
         self.total_wait = 0.0
         self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
+        # optional repro.cluster.telemetry.Telemetry sink (occupancy
+        # timeline samples, batch-size histograms); None is the golden
+        # default
+        self.telemetry = None
         # live service-time multiplier (thermal throttling injected by
         # fleet.ServiceDrift); 1.0 multiplies bit-exactly, so the
         # undrifted server is unchanged.  Plans never see this — only
@@ -133,7 +137,11 @@ class SlotServer:
         self.admitted += 1
         self.busy_time += service
         self.total_wait += start - arrival
-        self.peak_load = max(self.peak_load, self.load(arrival))
+        ld = self.load(arrival)
+        if ld > self.peak_load:
+            self.peak_load = ld
+        if self.telemetry is not None:
+            self.telemetry.occupancy_sample(self.name, arrival, ld)
         return start, finish
 
     @property
@@ -249,6 +257,10 @@ class BatchingSlotServer:
         self.total_wait = 0.0
         self.peak_load = 0  # max concurrent in-flight seen at an admission
         self._last_admit = float("-inf")
+        # optional repro.cluster.telemetry.Telemetry sink (occupancy
+        # timeline samples, batch-size histograms); None is the golden
+        # default
+        self.telemetry = None
         self.service_scale = 1.0  # same live throttle hook as SlotServer
 
     def load(self, now: float) -> int:
@@ -311,7 +323,11 @@ class BatchingSlotServer:
                 self._queue.schedule(
                     arrival + window, lambda k=key: self._close(k)
                 )
-        self.peak_load = max(self.peak_load, self.load(arrival))
+        ld = self.load(arrival)
+        if ld > self.peak_load:
+            self.peak_load = ld
+        if self.telemetry is not None:
+            self.telemetry.occupancy_sample(self.name, arrival, ld)
 
     def _effective_window(self) -> float:
         """Gather window for a batch opening now: the configured window,
@@ -331,6 +347,8 @@ class BatchingSlotServer:
         # member times were scaled at submit; the fused launch prices
         # them as-is (scale 1.0 is a bit-exact no-op throughout)
         batch_t = self.model.batch_time([svc for _, svc, _ in items])
+        if self.telemetry is not None:
+            self.telemetry.batch_sample(self.name, len(items))
         free = heapq.heappop(self._slots)
         start = max(ready, free)
         finish = start + batch_t

@@ -246,6 +246,7 @@ def run_fleet_vectorized(
     migration: Optional[MigrationConfig],
     codec: Optional[CodecConfig],
     client_classes: Optional[Tuple[object, ...]],
+    telemetry=None,
 ) -> "FleetResult":
     """The vectorized twin of ``fleet.run_fleet``'s event loop.
 
@@ -294,6 +295,13 @@ def run_fleet_vectorized(
             servers[e] = SlotServer(e, tier.capacity)
     edge_index = {e: i for i, e in enumerate(edges)}
     server_list = [servers[e] for e in edges]
+    tel = telemetry
+    if tel is not None:
+        # wire instrumentation before admission planning (counts the
+        # initial cache misses); batching servers report occupancy and
+        # batch sizes through the shared events.py code — only the
+        # inlined FIFO path below needs explicit hook calls
+        tel.attach(cache=cache, servers=server_list)
 
     # --- struct-of-arrays server state (FIFO fast path) -------------------
     # the heaps ALIAS the SlotServer's own lists (mid-run load() reads by
@@ -569,6 +577,10 @@ def run_fleet_vectorized(
         if drifted[c] or rate_dirty[c]:
             if drifted[c]:
                 replans_n[c] += 1
+                if tel is not None:
+                    tel.count("plan.replans.drift")
+            elif tel is not None:
+                tel.count("plan.replans.rate")
             _replan(c, edge_i[c])
         arrival = i * period
         tf = t_free[c]
@@ -637,6 +649,8 @@ def run_fleet_vectorized(
 
         def done(s_start: float, s_end: float) -> None:
             wait = w_acc + (s_start - arrived) + (s_end - (s_start + service))
+            if tel is not None:
+                tel.visit_placed(c, True, arrived, s_start, s_end, service)
             now = q.now
             if j + 1 < nvis[c]:
                 vidx[c] = j + 1
@@ -701,11 +715,21 @@ def run_fleet_vectorized(
         else:
             plan, fp = hit
             cache.stats.hits += 1
+            if cache.on_event is not None:
+                cache.on_event("hit")
         edge_i[c] = edge_index[e]
         rngs[c] = np.random.default_rng(seed + c)
         zbuf[c] = np.empty(0)
         rings[c] = {}
         _set_plan(c, plan, fp)
+    if tel is not None:
+        home_cls = topo.tier(home).name
+        tel.register_clients(
+            {
+                c: (tier_of[c].name if tier_of[c] is not None else home_cls)
+                for c in range(N)
+            }
+        )
 
     controller: Optional[MigrationController] = None
     if migration is not None:
@@ -787,6 +811,11 @@ def run_fleet_vectorized(
                     ld = len(fins)
                     if ld > peak_l[si]:
                         peak_l[si] = ld
+                    if tel is not None:
+                        # same order as SlotServer.admit + placed:
+                        # occupancy sample first, then the visit record
+                        tel.occupancy_sample(edges[si], now, ld)
+                        tel.visit_placed(c, False, now, s_start, s_end, service)
                     wait = (
                         wait_acc[c]
                         + (s_start - now)
@@ -829,6 +858,20 @@ def run_fleet_vectorized(
                 next_i[c] = i + 1
                 t_free[c] = fin
                 twait[c] += wait
+                if tel is not None:
+                    tel.frame_done(
+                        c,
+                        i,
+                        edges[edge_i[c]],
+                        start,
+                        fin,
+                        plan_obj[c],
+                        (
+                            tuple(blk_D[c][pend_pos[c]].tolist())
+                            if has_legs[c]
+                            else ()
+                        ),
+                    )
                 if has_legs[c]:
                     fl = blk_fl[c][pend_pos[c]]
                     if fl:
@@ -882,6 +925,10 @@ def run_fleet_vectorized(
                         )
                         if move is not None:
                             target, mig_latency = move
+                            if tel is not None:
+                                tel.migration(
+                                    c, fin, mig_latency, edges[edge_i[c]], target
+                                )
                             edge_i[c] = edge_index[target]
                             migr_n[c] += 1
                             t_free[c] = fin + mig_latency
@@ -958,7 +1005,7 @@ def run_fleet_vectorized(
         )
         for e in edges
     ]
-    return FleetResult(
+    result = FleetResult(
         clients=client_results,
         edges=edge_loads,
         cache=cache,
@@ -967,3 +1014,9 @@ def run_fleet_vectorized(
         migration=controller.stats if controller is not None else None,
         events=processed,
     )
+    if tel is not None:
+        tel.finish_run(
+            result, rates=list(rates) if rates is not None else None
+        )
+        tel.detach(cache=cache, servers=server_list)
+    return result

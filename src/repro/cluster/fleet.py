@@ -285,6 +285,7 @@ def run_fleet(
     engine: str = "object",
     client_classes: Optional[Sequence[object]] = None,
     adaptive_window: Optional[AdaptiveWindow] = None,
+    telemetry=None,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -352,6 +353,14 @@ def run_fleet(
     edge's gather window from its observed inter-arrival EWMA — idle
     edges stop paying the window as pure latency.  ``None`` (default)
     keeps the fixed window exactly.
+
+    Telemetry: passing a :class:`~repro.cluster.telemetry.Telemetry`
+    records per-frame span traces (exact loop-time decomposition,
+    Chrome-trace exportable), a metrics registry (cache, migration,
+    codec, server occupancy/batch instruments), and the inputs of the
+    latency-attribution report.  Purely observational: both engines
+    record the identical trace, and ``telemetry=None`` (default) is
+    bit-for-bit the uninstrumented fleet.
     """
     if num_clients < 1:
         raise ValueError("need at least one client")
@@ -421,6 +430,7 @@ def run_fleet(
             migration=migration,
             codec=codec,
             client_classes=classes,
+            telemetry=telemetry,
         )
 
     cache = cache if cache is not None else PlanCache()
@@ -440,6 +450,11 @@ def run_fleet(
             )
         else:
             servers[e] = SlotServer(e, tier.capacity)
+    tel = telemetry
+    if tel is not None:
+        # wire instrumentation before admission planning so the initial
+        # cache misses are observed too
+        tel.attach(cache=cache, servers=servers.values())
     detector = DriftDetector(
         threshold=drift_threshold,
         window=drift_window,
@@ -488,6 +503,14 @@ def run_fleet(
                 tier=tier_c,
             )
         )
+    if tel is not None:
+        home_cls = topo.tier(topo.home).name
+        tel.register_clients(
+            {
+                c.idx: (c.tier.name if c.tier is not None else home_cls)
+                for c in clients
+            }
+        )
 
     controller: Optional[MigrationController] = None
     if migration is not None:
@@ -529,6 +552,10 @@ def run_fleet(
         if client.drifted or client.rate_dirty:
             if client.drifted:
                 client.replans += 1
+                if tel is not None:
+                    tel.count("plan.replans.drift")
+            elif tel is not None:
+                tel.count("plan.replans.rate")
             replan(client, client.edge)
         arrival = i * period
         start = max(arrival, client.t_free)
@@ -572,6 +599,15 @@ def run_fleet(
             wait = wait_acc + (svc_start - arrived) + (
                 svc_end - (svc_start + service)
             )
+            if tel is not None:
+                tel.visit_placed(
+                    c.idx,
+                    isinstance(servers[tier], BatchingSlotServer),
+                    arrived,
+                    svc_start,
+                    svc_end,
+                    service,
+                )
             if vidx + 1 < len(c.visits):
                 q.schedule(svc_end, lambda: visit(c, vidx + 1, wait))
             else:
@@ -595,6 +631,16 @@ def run_fleet(
         client.next_i = i + 1
         client.t_free = fin
         client.total_wait += wait
+        if tel is not None:
+            tel.frame_done(
+                client.idx,
+                i,
+                client.edge,
+                start,
+                fin,
+                client.plan,
+                tuple(d for _, d in observed),
+            )
         if observed:
             if detector.observe(client.idx, client.plan, observed):
                 client.drifted = True
@@ -641,6 +687,8 @@ def run_fleet(
             )
             if move is not None:
                 target, mig_latency = move
+                if tel is not None:
+                    tel.migration(client.idx, fin, mig_latency, client.edge, target)
                 client.edge = target
                 client.migrations += 1
                 # the state transfer blocks the client between frames;
@@ -701,7 +749,7 @@ def run_fleet(
         )
         for e in edges
     ]
-    return FleetResult(
+    result = FleetResult(
         clients=client_results,
         edges=edge_loads,
         cache=cache,
@@ -710,6 +758,15 @@ def run_fleet(
         migration=controller.stats if controller is not None else None,
         events=q.processed,
     )
+    if tel is not None:
+        tel.finish_run(
+            result,
+            rates=(
+                [c.rate for c in clients] if codec is not None else None
+            ),
+        )
+        tel.detach(cache=cache, servers=servers.values())
+    return result
 
 
 @dataclasses.dataclass

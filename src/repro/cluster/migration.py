@@ -176,6 +176,12 @@ class MigrationStats:
 
     records: List[MigrationRecord] = dataclasses.field(default_factory=list)
     considered: int = 0  # considerations that passed the dwell gate
+    # decision accounting (telemetry): dwell-gated asks, and post-dwell
+    # considerations that found no target clearing the improvement
+    # threshold (staying put counts — the best target failed to beat
+    # the current edge by the hysteresis margin).  accepted == count.
+    rejected_dwell: int = 0
+    rejected_threshold: int = 0
 
     @property
     def count(self) -> int:
@@ -463,6 +469,7 @@ class MigrationController:
         if codec is None:
             codec = self.codec
         if not force and self._dwell.get(client, 0) < self.config.min_dwell_frames:
+            self.stats.rejected_dwell += 1
             return None
         self.stats.considered += 1
         if self._disp is not None:
@@ -480,6 +487,7 @@ class MigrationController:
             finally:
                 self.assignments[current] = orig
             if target == current:
+                self.stats.rejected_threshold += 1
                 return None
             cur_t = self.predicted_frame_time(
                 current, now, current, codec, client_tier
@@ -494,11 +502,13 @@ class MigrationController:
             }
             target = min(self.edges, key=lambda e: (times[e], e))
             if target == current:
+                self.stats.rejected_threshold += 1
                 return None
             cur_t, new_t = times[current], times[target]
         # strict inequality, and (1 - inf) * cur_t == -inf: an infinite
         # threshold can never be cleared, which is the exact off-switch
         if not new_t < cur_t * (1.0 - self.config.improvement_threshold):
+            self.stats.rejected_threshold += 1
             return None
         src = state_src if state_src is not None else self.home
         latency = self.migration_time(src, target, codec)

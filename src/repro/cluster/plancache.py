@@ -131,6 +131,10 @@ class PlanCache:
     def __init__(self) -> None:
         self._plans: Dict[Tuple, PlanReport] = {}
         self.stats = CacheStats()
+        # optional telemetry hook ``fn(kind, n=1)`` fired alongside
+        # ``stats`` (kinds: "hit" / "miss" / "invalidation"); None (the
+        # default) is a no-op — see repro.cluster.telemetry
+        self.on_event = None
 
     def __len__(self) -> int:
         return len(self._plans)
@@ -176,11 +180,15 @@ class PlanCache:
         if cached is not None:
             if record_stats:
                 self.stats.hits += 1
+                if self.on_event is not None:
+                    self.on_event("hit")
             return cached, True
         rep = offload.plan(comp, topo, policy, planner=planner, codec=codec)
         self._plans[key] = rep
         if record_stats:
             self.stats.misses += 1
+            if self.on_event is not None:
+                self.on_event("miss")
         return rep, False
 
     def invalidate_link(self, link_name: str) -> int:
@@ -195,6 +203,8 @@ class PlanCache:
         for key in doomed:
             del self._plans[key]
         self.stats.invalidations += len(doomed)
+        if doomed and self.on_event is not None:
+            self.on_event("invalidation", len(doomed))
         return len(doomed)
 
 

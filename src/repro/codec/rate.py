@@ -172,6 +172,9 @@ class RateController:
         self._pressure = 0.0
         self._frames_since_switch = 0
         self.switches = 0
+        # ladder-transition log, one (frame_idx, old_bits, new_bits)
+        # per switch — consumed by repro.cluster.telemetry
+        self.transitions: list = []
         self.model: CodecModel = (
             cfg.base if not cfg.adapt else self._operating_point(0)
         )
@@ -237,6 +240,9 @@ class RateController:
             proposal != self.model
             and self._frames_since_switch >= self.cfg.min_dwell_frames
         ):
+            self.transitions.append(
+                (frame_idx, self.model.quant_bits, proposal.quant_bits)
+            )
             self.model = proposal
             self._frames_since_switch = 0
             self.switches += 1

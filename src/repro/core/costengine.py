@@ -222,6 +222,17 @@ class PlanReport:
     # simulator (repro.cluster) charges the remote entries against a
     # contended server's service slots instead of a dedicated machine
     compute_by_tier: Tuple[Tuple[str, float], ...] = ()
+    # span-attribution breakdown: (category, seconds) pairs partitioning
+    # total_time by where the time is spent (compute_home/compute_remote,
+    # encode/decode at each end, lat_up/lat_down, wire_up/wire_down,
+    # wrapper) plus the pre-codec byte count shipped uplink
+    # (raw_bytes_up).  Consumed by repro.cluster.telemetry; every entry
+    # is accumulated in parallel with the existing totals so arming it
+    # costs nothing and changes nothing.
+    breakdown: Tuple[Tuple[str, float], ...] = ()
+    # up/down direction of every recorded latency leg, index-aligned
+    # with ``legs`` (True = downlink-direction hop relative to home)
+    leg_down: Tuple[bool, ...] = ()
 
     @property
     def fps(self) -> float:
@@ -451,6 +462,11 @@ class CostEngine:
         down_bytes = 0
         legs: List[LatencyLeg] = []
         compute_by_tier: Dict[str, float] = {}  # insertion = first-visit order
+        bd: Dict[str, float] = {}  # span-attribution breakdown
+        leg_down: List[bool] = []  # direction flag per entry of `legs`
+
+        def _bd(key: str, v: float) -> None:
+            bd[key] = bd.get(key, 0.0) + v
 
         def _ship(nbytes: int, src: str, dst: str, piggyback: Optional[bool]) -> None:
             """Payload cost: codec encode/decode (when armed) + fetch
@@ -458,31 +474,46 @@ class CostEngine:
             bytes."""
             nonlocal compute_t, wrapper_t, network_t, up_bytes, down_bytes
             links = topo.path_links(src, dst)
+            # hop direction relative to home (see the byte-accounting
+            # comment below); link k crosses hops[k] -> hops[k+1]
+            hops = topo.path_tiers(src, dst)
+            downs = [
+                b in topo.path_tiers(a, topo.home)
+                for a, b in zip(hops, hops[1:])
+            ]
             piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
             wire_n, enc_t, dec_t = self._codec_terms(nbytes, src, dst)
             if enc_t > 0.0:  # encode where the payload lives...
                 compute_t += enc_t
                 compute_by_tier[src] = compute_by_tier.get(src, 0.0) + enc_t
+                _bd("encode_home" if src == topo.home else "encode_remote", enc_t)
             if dec_t > 0.0:  # ...decode where it lands (slot work there)
                 compute_t += dec_t
                 compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + dec_t
+                _bd("decode_home" if dst == topo.home else "decode_remote", dec_t)
             if not piggy:
-                for link in links:
+                for link, dwn in zip(links, downs):
                     network_t += link.latency
                     legs.append(LatencyLeg(link.name, link.latency, link.jitter))
-            wrapper_t += serialization_time(wire_n, topo.wrapper)
+                    leg_down.append(dwn)
+                    _bd("lat_down" if dwn else "lat_up", link.latency)
+            ser_t = serialization_time(wire_n, topo.wrapper)
+            wrapper_t += ser_t
+            _bd("wrapper", ser_t)
             network_t += wire_time(wire_n, links)
+            for link, dwn in zip(links, downs):
+                _bd("wire_down" if dwn else "wire_up", wire_n / link.bandwidth)
             # byte accounting is per wire hop relative to home (a payload
             # crossing two legs is counted on each): a hop whose far end
             # lies on its near end's route home is downlink — this keeps
             # star leaf->leaf traffic (down to the hub, then up a spoke)
             # honest, where any whole-transfer label would be wrong
-            hops = topo.path_tiers(src, dst)
-            for a, b in zip(hops, hops[1:]):
-                if b in topo.path_tiers(a, topo.home):
+            for dwn in downs:
+                if dwn:
                     down_bytes += wire_n
                 else:
                     up_bytes += wire_n
+                    _bd("raw_bytes_up", float(nbytes))
 
         def _best_source(holders: Set[str], dst: str, nbytes: int) -> str:
             if len(holders) == 1:
@@ -498,13 +529,19 @@ class CostEngine:
                     # RPC envelope: proxy + skeleton call costs, request +
                     # response wire latency on every leg of the route.
                     wrapper_t += 2 * topo.wrapper.call_overhead
+                    _bd("wrapper", 2 * topo.wrapper.call_overhead)
                     for link in topo.path_links(topo.home, dst):
                         network_t += 2 * link.latency
                         legs.append(LatencyLeg(link.name, link.latency, link.jitter))
                         legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+                        leg_down.append(False)  # request leg, away from home
+                        leg_down.append(True)  # response leg, back home
+                        _bd("lat_up", link.latency)
+                        _bd("lat_down", link.latency)
                 else:
                     # Local wrapped invocation still crosses the JNI boundary.
                     wrapper_t += topo.wrapper.call_overhead
+                    _bd("wrapper", topo.wrapper.call_overhead)
             # --- move inputs to `dst` (piggybacked on the invocation) ---
             for name in stage.inputs:
                 holders = residency[name]
@@ -516,11 +553,14 @@ class CostEngine:
                 elif topo.wrapped and dst == topo.home:
                     # Already-local input of a wrapped home call marshals
                     # across JNI once (fast path: pinned arrays).
-                    wrapper_t += table[name].nbytes / topo.wrapper.jni_bandwidth
+                    marshal_t = table[name].nbytes / topo.wrapper.jni_bandwidth
+                    wrapper_t += marshal_t
+                    _bd("wrapper", marshal_t)
             # --- compute ---
             ct = self.compute_time(stage, dst)
             compute_t += ct
             compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + ct
+            _bd("compute_home" if dst == topo.home else "compute_remote", ct)
             for o in stage.outputs:
                 residency[o.name] = {dst}
 
@@ -546,4 +586,6 @@ class CostEngine:
             downlink_bytes=down_bytes,
             legs=tuple(legs),
             compute_by_tier=tuple(compute_by_tier.items()),
+            breakdown=tuple(bd.items()),
+            leg_down=tuple(leg_down),
         )

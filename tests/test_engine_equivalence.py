@@ -68,6 +68,11 @@ def _assert_equivalent(ro, rv):
     if ro.migration is not None:
         assert ro.migration.count == rv.migration.count
         assert ro.migration.considered == rv.migration.considered
+        assert ro.migration.rejected_dwell == rv.migration.rejected_dwell
+        assert (
+            ro.migration.rejected_threshold
+            == rv.migration.rejected_threshold
+        )
         assert [
             (r.client, r.src, r.dst, r.time) for r in ro.migration.records
         ] == [(r.client, r.src, r.dst, r.time) for r in rv.migration.records]
@@ -136,6 +141,28 @@ def test_engines_identical_on_golden_config(name):
     ro, rv = _run_both(**_CONFIGS[name])
     _assert_equivalent(ro, rv)
     assert ro.events > 0  # the golden is not vacuous
+
+
+@pytest.mark.parametrize("name", sorted(_CONFIGS))
+def test_edge_load_parity_audit(name):
+    """Dedicated EdgeLoad audit: dataclass equality across engines
+    (every field, including the fused-batch and peak-load accounting)
+    plus the internal-consistency invariants any report must satisfy —
+    a field added to EdgeLoad without vectorized support fails here
+    even if the aggregate fps/drop numbers still agree."""
+    kw = _CONFIGS[name]
+    ro, rv = _run_both(**kw)
+    assert ro.edges == rv.edges  # dataclass __eq__: field-by-field
+    assert sum(load.clients for load in ro.edges) == kw["num_clients"]
+    assert sum(load.admitted for load in ro.edges) > 0
+    for load in ro.edges:
+        assert load.capacity > 0 and load.admitted >= 0
+        assert load.busy_time >= 0.0 and load.mean_wait >= 0.0
+        assert 0 <= load.peak_load <= load.admitted
+        if load.batches:
+            assert load.mean_batch_size == load.admitted / load.batches
+        else:
+            assert load.mean_batch_size == 0.0
 
 
 def test_vector_engine_is_seed_stable():

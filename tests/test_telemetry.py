@@ -1,0 +1,426 @@
+"""Telemetry layer: exact span sums, off-switch golden, engine parity.
+
+Three contracts, each asserted with EXACT equality (``==`` on floats):
+
+1. **Span exactness** — every processed frame's span tuple folds
+   left-to-right to its recorded loop time bit for bit, on BOTH
+   engines, with batching + migration + codec + drift armed at once
+   (the hypothesis property test; the conftest shim stands in when
+   hypothesis is absent).
+2. **Off-switch golden** — ``telemetry=None`` is the default and an
+   armed ``Telemetry`` must not perturb the simulation: event counts,
+   frame streams, and loop times are identical with and without it.
+3. **Engine parity** — the object and vectorized engines feed the
+   hooks identical inputs, so two ``Telemetry`` instances observing
+   the same workload on different engines are byte-identical: frames,
+   blackouts, occupancy timelines, and full metric snapshots.
+
+Plus unit coverage of the registry instruments, the Chrome trace
+export, the attribution report, and the bench-artifact validator.
+"""
+
+import json
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    MigrationConfig,
+    PlanCache,
+    SPAN_ORDER,
+    Telemetry,
+    run_fleet,
+)
+from repro.cluster.fleet import LinkDrift
+from repro.cluster.telemetry import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    exact_spans,
+)
+from repro.codec import CodecConfig
+from repro.sim import hardware
+
+_COMP = hardware.paper_staged()
+
+
+def _everything_kwargs(num_clients=8, num_frames=40, seed=0,
+                       gather_window=2e-3, with_drift=True):
+    """Hetero star with batching + migration + codec (+ drift) armed —
+    the config where every span source is live at once."""
+    topo, classes = hardware.hetero_fleet_star(num_edges=3, edge_capacity=2)
+    kw = dict(
+        topo=topo,
+        comp=_COMP,
+        num_clients=num_clients,
+        num_frames=num_frames,
+        seed=seed,
+        dispatch="least_queue",
+        client_classes=classes,
+        batching=True,
+        gather_window=gather_window,
+        migration=MigrationConfig(),
+        codec=CodecConfig(base=hardware.codec_point()),
+    )
+    if with_drift:
+        kw["drifts"] = [
+            LinkDrift(time=0.4, link="5g_edge_0", latency=0.06, jitter=0.012)
+        ]
+    return kw
+
+
+def _assert_spans_match_loops(result, tel):
+    """Every frame's span fold == its ClientResult loop time, exactly."""
+    by_client = {}
+    for client, _cls, _edge, idx, start, fin, spans in tel.frames:
+        by_client.setdefault(client, {})[idx] = (start, fin, spans)
+    checked = 0
+    for c in result.clients:
+        frames = by_client.get(c.client, {})
+        assert len(frames) == len(c.stats.processed)
+        for ev in c.stats.processed:
+            start, fin, spans = frames[ev.index]
+            assert start == ev.start and fin == ev.finish
+            fold = 0.0
+            for d in spans:
+                fold += d
+            assert fold == ev.finish - ev.start  # exact, not approx
+            checked += 1
+    assert checked == len(tel.frames)
+    assert tel.verify_exact() == checked
+
+
+# ---------------------------------------------------------------------------
+# contract 1: exact span sums (property test, everything armed)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=6, deadline=None)
+@given(
+    st.integers(min_value=4, max_value=9),  # num_clients
+    st.integers(min_value=25, max_value=45),  # num_frames
+    st.integers(min_value=0, max_value=5),  # seed
+    st.sampled_from([1e-3, 2e-3, 3e-3]),  # gather_window
+    st.sampled_from([False, True]),  # with_drift
+)
+def test_span_sums_exact_on_random_everything_fleets(
+    num_clients, num_frames, seed, gather_window, with_drift
+):
+    kw = _everything_kwargs(
+        num_clients, num_frames, seed, gather_window, with_drift
+    )
+    for engine in ("object", "vector"):
+        tel = Telemetry()
+        r = run_fleet(engine=engine, cache=PlanCache(), telemetry=tel, **kw)
+        assert r.events > 0 and tel.frames
+        _assert_spans_match_loops(r, tel)
+
+
+def test_span_order_matches_trace_tuples():
+    tel = Telemetry()
+    run_fleet(
+        engine="object", cache=PlanCache(), telemetry=tel,
+        **_everything_kwargs(num_clients=5, num_frames=20),
+    )
+    for *_ignored, spans in tel.frames:
+        assert len(spans) == len(SPAN_ORDER)
+
+
+# ---------------------------------------------------------------------------
+# contract 2: the off-switch is golden
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["object", "vector"])
+def test_telemetry_off_switch_is_bit_identical(engine):
+    kw = _everything_kwargs(num_clients=7, num_frames=35)
+    bare = run_fleet(engine=engine, cache=PlanCache(), **kw)
+    tel = Telemetry()
+    armed = run_fleet(engine=engine, cache=PlanCache(), telemetry=tel, **kw)
+    assert bare.events == armed.events
+    assert bare.duration == armed.duration
+    for cb, ca in zip(bare.clients, armed.clients):
+        assert cb.stats.loop_times() == ca.stats.loop_times()
+        assert cb.edge == ca.edge
+        assert cb.total_wait == ca.total_wait
+    for lb, la in zip(bare.edges, armed.edges):
+        assert (lb.admitted, lb.busy_time, lb.peak_load) == (
+            la.admitted, la.busy_time, la.peak_load
+        )
+
+
+# ---------------------------------------------------------------------------
+# contract 3: both engines emit byte-identical telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_engines_emit_identical_telemetry():
+    kw = _everything_kwargs(num_clients=9, num_frames=45)
+    tels = {}
+    for engine in ("object", "vector"):
+        tel = Telemetry()
+        run_fleet(engine=engine, cache=PlanCache(), telemetry=tel, **kw)
+        tels[engine] = tel
+    to, tv = tels["object"], tels["vector"]
+    assert to.frames == tv.frames
+    assert to.blackouts == tv.blackouts
+    assert to.occupancy == tv.occupancy
+    assert to.metrics.snapshot() == tv.metrics.snapshot()
+
+
+def test_metrics_cover_every_armed_subsystem():
+    tel = Telemetry()
+    r = run_fleet(
+        engine="vector", cache=PlanCache(), telemetry=tel,
+        **_everything_kwargs(num_clients=8, num_frames=45),
+    )
+    snap = tel.metrics.snapshot()
+    counters, gauges, hists = (
+        snap["counters"], snap["gauges"], snap["histograms"]
+    )
+    # plan cache + migration decision accounting
+    assert counters["plancache.miss"] == r.cache.stats.misses
+    assert counters["plancache.hit"] == r.cache.stats.hits
+    assert counters["migration.considered"] == r.migration.considered
+    assert counters["migration.accepted"] == r.migration.count
+    # codec byte accounting: compressed never exceeds raw
+    assert 0 < counters["codec.uplink_wire_bytes"] <= (
+        counters["codec.uplink_raw_bytes"]
+    )
+    # per-edge gauges mirror the EdgeLoad report
+    for e in r.edges:
+        assert gauges[f"edge.peak_load.{e.name}"] == e.peak_load
+        assert gauges[f"edge.busy_s.{e.name}"] == e.busy_time
+        assert gauges[f"edge.admitted.{e.name}"] == e.admitted
+    # batching edges feed the batch-size histogram
+    assert hists["batch.size"]["count"] == sum(e.batches for e in r.edges)
+    assert hists["frame.loop_s"]["count"] == len(tel.frames)
+
+
+# ---------------------------------------------------------------------------
+# exports: chrome trace + attribution table
+# ---------------------------------------------------------------------------
+
+
+def _small_run():
+    tel = Telemetry()
+    run_fleet(
+        engine="vector", cache=PlanCache(), telemetry=tel,
+        **_everything_kwargs(num_clients=6, num_frames=30),
+    )
+    return tel
+
+
+def test_chrome_trace_export_shape(tmp_path):
+    tel = _small_run()
+    path = tmp_path / "trace.json"
+    doc = tel.export_chrome_trace(str(path))
+    ondisk = json.loads(path.read_text())
+    assert ondisk == doc
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    phases = {e["ph"] for e in events}
+    assert {"M", "X", "C"} <= phases
+    for e in events:
+        if e["ph"] == "X":
+            assert e["dur"] > 0.0  # non-positive spans are display-skipped
+            assert e["ts"] >= 0.0
+    names = {e["name"] for e in events if e["ph"] == "X"}
+    assert "compute" in names and "uplink" in names
+    if tel.blackouts:
+        assert "migration-blackout" in names
+
+
+def test_attribution_report_and_table():
+    tel = _small_run()
+    att = tel.attribution()
+    assert "all" in att
+    assert len(att) > 1  # hetero classes present alongside "all"
+    for rep in att.values():
+        shares = [s["share"] for s in rep["spans"].values()]
+        assert abs(sum(shares) - 1.0) < 1e-9
+        assert rep["loop_p99_ms"] >= rep["loop_p50_ms"]
+    table = tel.format_attribution_table()
+    assert "latency attribution [all]" in table
+    for name in SPAN_ORDER:
+        assert name in table
+
+
+def test_attribution_collapses_single_class():
+    tel = Telemetry()
+    topo = hardware.fleet_star(num_edges=2, edge_capacity=2)
+    run_fleet(
+        topo=topo, comp=_COMP, num_clients=4, num_frames=20,
+        engine="object", cache=PlanCache(), telemetry=tel,
+    )
+    assert list(tel.attribution()) == ["all"]
+
+
+# ---------------------------------------------------------------------------
+# instrument unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_exact_spans_identity_and_fallback():
+    parts = (0.1, 0.2, 0.3)
+    loop = 0.0
+    for d in parts:
+        loop += d
+    spans = exact_spans(parts, loop)
+    assert spans[:-1] == parts
+    fold = 0.0
+    for d in spans:
+        fold += d
+    assert fold == loop
+    # degenerate target: fold must still hit it exactly
+    spans = exact_spans((1e300, -1e300, 1e300), 42.0)
+    fold = 0.0
+    for d in spans:
+        fold += d
+    assert fold == 42.0
+
+
+def test_counter_gauge_histogram():
+    c = Counter()
+    c.inc()
+    c.inc(4)
+    assert c.value == 5
+    g = Gauge()
+    g.set(3.5)
+    g.set(1.25)
+    assert g.value == 1.25
+    h = Histogram(lo=1.0, growth=2.0, nbuckets=4)
+    for v in (0.5, 1.0, 3.0, 9.0, 100.0):
+        h.observe(v)
+    assert h.count == 5
+    assert h.vmin == 0.5 and h.vmax == 100.0
+    assert h.mean == pytest.approx(113.5 / 5)
+    assert h.percentile(0.0) == 1.0  # rank clamps to 1
+    assert h.percentile(1.0) == 8.0  # overflow reports the last bound
+    snap = h.snapshot()
+    assert snap["count"] == 5 and snap["p50"] <= snap["p99"]
+    with pytest.raises(ValueError):
+        Histogram(lo=0.0)
+
+
+def test_histogram_empty_snapshot():
+    h = Histogram()
+    assert h.percentile(0.99) == 0.0
+    snap = h.snapshot()
+    assert snap == {
+        "count": 0, "mean": 0.0, "min": 0.0, "max": 0.0, "p50": 0.0,
+        "p99": 0.0,
+    }
+
+
+def test_registry_create_on_touch_and_snapshot():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.gauge("g") is reg.gauge("g")
+    assert reg.histogram("h") is reg.histogram("h")
+    reg.counter("a").inc(2)
+    snap = reg.snapshot()
+    assert snap["counters"] == {"a": 2}
+    assert list(snap["gauges"]) == ["g"]
+    assert snap["histograms"]["h"]["count"] == 0
+
+
+def test_verify_exact_raises_on_corruption():
+    tel = _small_run()
+    client, cls, edge, idx, start, fin, spans = tel.frames[0]
+    tel.frames[0] = (client, cls, edge, idx, start, fin + 1.0, spans)
+    with pytest.raises(AssertionError):
+        tel.verify_exact()
+
+
+# ---------------------------------------------------------------------------
+# bench-artifact schema: stamping + validation
+# ---------------------------------------------------------------------------
+
+
+def _bench_modules():
+    import pathlib
+    import sys
+
+    bench_dir = str(pathlib.Path(__file__).resolve().parent.parent / "benchmarks")
+    if bench_dir not in sys.path:
+        sys.path.insert(0, bench_dir)
+    import common
+    import validate_bench
+
+    return common, validate_bench
+
+
+def test_write_bench_json_stamps_envelope(tmp_path, monkeypatch):
+    common, validate_bench = _bench_modules()
+    monkeypatch.setattr(common, "REPO_ROOT", tmp_path)
+    path = common.write_bench_json("fleet_codec", {
+        "knee_fps": 25.0, "knee_shift": 2.0,
+        "knees": {"raw": 4, "codec": 8}, "smoke": True,
+    })
+    doc = json.loads(path.read_text())
+    assert doc["schema_version"] == common.SCHEMA_VERSION
+    assert isinstance(doc["git_rev"], str) and doc["git_rev"]
+    schema = json.loads(validate_bench.SCHEMA_PATH.read_text())
+    assert validate_bench.validate_file(path, schema) == []
+
+
+def test_validator_flags_missing_and_mistyped_keys(tmp_path):
+    _common, validate_bench = _bench_modules()
+    schema = json.loads(validate_bench.SCHEMA_PATH.read_text())
+    bad = tmp_path / "BENCH_fleet_codec.json"
+    bad.write_text(json.dumps({
+        "schema_version": "one",  # mistyped
+        "git_rev": "abc",
+        "knee_fps": 25.0,
+        # knee_shift missing
+        "knees": {"raw": 4},
+        "smoke": True,
+    }))
+    errors = validate_bench.validate_file(bad, schema)
+    assert any("schema_version" in e and "expected int" in e for e in errors)
+    assert any("knee_shift" in e and "missing" in e for e in errors)
+
+
+def test_validator_optional_and_list_specs(tmp_path):
+    _common, validate_bench = _bench_modules()
+    schema = json.loads(validate_bench.SCHEMA_PATH.read_text())
+    doc = {
+        "schema_version": 1,
+        "git_rev": "abc",
+        "gate_min_speedup": 2.0,
+        "reps": 3,
+        "smoke": True,
+        "points": [{
+            "clients": 256, "edges": 16, "frames": 120, "events": 100,
+            "object_events_per_s": 1.0, "vector_events_per_s": 3.0,
+            "speedup": 3.0,
+            # optional telemetry fields absent: still valid
+        }],
+    }
+    good = tmp_path / "BENCH_fleet_events.json"
+    good.write_text(json.dumps(doc))
+    assert validate_bench.validate_file(good, schema) == []
+    doc["points"][0]["telemetry_overhead_pct"] = "high"  # optional but typed
+    bad = tmp_path / "BENCH_fleet_events.json"
+    bad.write_text(json.dumps(doc))
+    errors = validate_bench.validate_file(bad, schema)
+    assert any("telemetry_overhead_pct" in e for e in errors)
+    # bools are not ints
+    doc["points"][0]["telemetry_overhead_pct"] = 1.0
+    doc["points"][0]["events"] = True
+    bad.write_text(json.dumps(doc))
+    assert any(
+        "events" in e for e in validate_bench.validate_file(bad, schema)
+    )
+
+
+def test_validator_main_passes_on_valid_artifact(tmp_path, capsys):
+    common, validate_bench = _bench_modules()
+    path = tmp_path / "BENCH_custom.json"  # unknown name: common spec only
+    path.write_text(json.dumps({"schema_version": 1, "git_rev": "abc"}))
+    assert validate_bench.main([str(path)]) == 0
+    assert "ok" in capsys.readouterr().out
+    path.write_text(json.dumps({"git_rev": "abc"}))
+    assert validate_bench.main([str(path)]) == 1
