@@ -54,6 +54,18 @@ the service-bound regime fused batching absorbs.  CI asserts the
 the *identity* codec reproduces the raw fleet event-for-event (the
 golden off-switch).
 
+``--contended`` measures the *shared-cell fairness* capacity shift:
+the ``shared_cell_star`` (every spoke's wire legs contend for one
+slotted radio medium) swept twice with the entropy codec — fairness
+off (``cell_threshold=inf``: the rate controller is structurally blind
+to cell queueing, so every client stays at the finest quantizer and
+the cell saturates) vs fairness on (the measured per-frame cell wait
+feeds the controller; the heaviest payloads back off down the bits
+ladder first).  CI asserts the 25 fps knee lands at >= 1.5x the
+codec-alone count, and that the unlimited-capacity cell
+(``cell_capacity=0``) reproduces the private-spoke fleet bit-for-bit
+on BOTH engines (the contention off-switch).
+
 ``--trace`` is the telemetry latency-attribution report: the
 everything-armed hetero star (heterogeneous classes + batching +
 migration + codec + mid-run drift) run on BOTH engines with a
@@ -71,6 +83,7 @@ the untraced arm is what proves the disabled hooks cost nothing.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -110,6 +123,26 @@ MIG_MAX_MOVES_PER_CLIENT = 3  # hysteresis flap bound
 # 40 ms real-time budget)
 CODEC_MIN_KNEE_SHIFT = 1.5
 CODEC_GATHER_WINDOW = 1.25e-3
+
+# the contention gate: capacity knee on a SHARED 5G cell (all spokes on
+# one radio medium) with the entropy codec, swept with and without the
+# shared-cell fairness loop.  Codec-alone keeps every client at the
+# finest quantizer — the pressure EWMA only sees leg jitter, and cell
+# queueing is structurally invisible to it — so the cell saturates;
+# the fair arm feeds the measured per-frame cell wait into the rate
+# controller, clients back off down the bits ladder (heaviest payload
+# first), and the knee moves.  CI asserts >= 1.5x.
+CONTENDED_MIN_KNEE_SHIFT = 1.5
+# narrower radio than the wired-star default so the sweep saturates at
+# CI-sized client counts, and one transmission slot: a classic cell
+CONTENDED_CELL_BW = 15e6  # bytes/sec shared across the cell
+CONTENDED_CELL_CAPACITY = 1
+# fairness knobs of the fair arm: ~0.4 ms of smoothed ratio-weighted
+# cell wait per ladder step (the ratio weighting shrinks raw waits by
+# ~10x at the fine operating points), a small deterministic per-client
+# stagger, and drop-coupled keyframe resync
+CONTENDED_CELL_THRESHOLD = 0.1e-3
+CONTENDED_BITS_LADDER = (16, 8, 4, 2)
 
 # the events gate: vectorized engine throughput vs the object engine on
 # the identical workload.  Measured ~3x best-of-3 on an idle dev box
@@ -334,6 +367,118 @@ def _assert_codec_identity_golden(gather_window) -> None:
             "identity codec changed per-edge admissions vs the raw fleet"
         )
     print("# identity codec == raw fleet, event for event (golden)")
+
+
+def _contended_cfg(fair: bool) -> CodecConfig:
+    """Codec arming for the contention sweep: the entropy-coded v2
+    operating point, with or without the shared-cell fairness loop."""
+    base = hardware.codec_point(entropy=True)
+    if not fair:
+        return CodecConfig(base=base, motion=sequence_motion())
+    return CodecConfig(
+        base=base,
+        motion=sequence_motion(),
+        # a deeper ladder: congested clients need somewhere to go
+        bits_ladder=CONTENDED_BITS_LADDER,
+        cell_threshold=CONTENDED_CELL_THRESHOLD,
+        cell_stagger=0.05,
+        # drop-coupled keyframe resync: a congested cell drops frames,
+        # and a lossy stream must see a fresh reference within 4 frames
+        resync_bound=4,
+    )
+
+
+def _contended_topo(
+    bandwidth: float = CONTENDED_CELL_BW,
+    cell_capacity: int = CONTENDED_CELL_CAPACITY,
+):
+    return hardware.shared_cell_star(
+        num_edges=2,
+        edge_capacity=4,
+        base_link=dataclasses.replace(
+            links.FIVE_G_EDGE, bandwidth=bandwidth
+        ),
+        cell_capacity=cell_capacity,
+    )
+
+
+def _contended_rows(client_counts, num_frames) -> tuple:
+    """Sweep the shared-cell star twice — entropy codec alone vs codec
+    plus cell fairness — reporting per-point fps/drop/p99, mean uplink
+    bytes, the cell's total queueing and codec switches."""
+    comp = hardware.paper_staged()
+    topo = _contended_topo()
+    rows = []
+    knees = {}
+    for mode, fair in (("codec", False), ("fair", True)):
+        pts = capacity_sweep(
+            topo,
+            comp,
+            client_counts,
+            num_frames=num_frames,
+            policy=Policy.AUTO,
+            dispatch="latency_weighted",
+            codec=_contended_cfg(fair),
+        )
+        knees[mode] = _knee(pts)
+        for p in pts:
+            r = p.result
+            cell_wait = sum(lk.total_wait for lk in r.links)
+            rows.append((
+                f"fleet/contended_{mode}_n{p.num_clients}",
+                r.mean_loop_time * 1e6,
+                f"fps={p.fps:.1f};drop={p.drop_rate:.3f};"
+                f"p99_ms={p.p99 * 1e3:.1f};"
+                f"up_kB={r.mean_uplink_bytes / 1e3:.1f};"
+                f"cell_wait_s={cell_wait:.2f};"
+                f"rate_changes={r.total_rate_changes}",
+            ))
+    return rows, knees
+
+
+def _assert_contended_off_switch_golden() -> None:
+    """The contention off-switch contract, enforced in CI: a shared
+    cell with unlimited capacity must reproduce the private-spoke fleet
+    bit-for-bit, on BOTH engines."""
+    comp = hardware.paper_staged()
+    private = hardware.fleet_star(num_edges=2, edge_capacity=4)
+    unlimited = hardware.shared_cell_star(
+        num_edges=2, edge_capacity=4, cell_capacity=0
+    )
+    kwargs = dict(
+        num_frames=60,
+        policy=Policy.AUTO,
+        dispatch="latency_weighted",
+        seed=0,
+    )
+    for eng in ("object", "vector"):
+        a = run_fleet(
+            private, comp, 6, engine=eng, cache=PlanCache(), **kwargs
+        )
+        b = run_fleet(
+            unlimited, comp, 6, engine=eng, cache=PlanCache(), **kwargs
+        )
+        for ca, cb in zip(a.clients, b.clients):
+            if (
+                ca.stats.processed != cb.stats.processed
+                or ca.stats.duration != cb.stats.duration
+                or ca.total_wait != cb.total_wait
+                or ca.plan.total_time != cb.plan.total_time
+            ):
+                raise SystemExit(
+                    f"unlimited shared cell diverged from the private "
+                    f"fleet on client {ca.client} ({eng} engine) — the "
+                    f"contention off-switch is no longer bit-for-bit"
+                )
+        if [e.admitted for e in a.edges] != [e.admitted for e in b.edges]:
+            raise SystemExit(
+                f"unlimited shared cell changed per-edge admissions "
+                f"({eng} engine)"
+            )
+    print(
+        "# unlimited shared cell == private fleet, bit for bit, "
+        "both engines (golden)"
+    )
 
 
 def _migration_grid(weak_factors, client_counts, num_frames) -> list:
@@ -701,6 +846,14 @@ def main() -> None:
         "is event-for-event the raw fleet",
     )
     ap.add_argument(
+        "--contended",
+        action="store_true",
+        help="sweep the shared-cell star with the entropy codec, with "
+        "and without cell fairness; assert the 25 fps knee shifts >= "
+        "1.5x and the unlimited cell is bit-for-bit the private fleet "
+        "on both engines",
+    )
+    ap.add_argument(
         "--events",
         action="store_true",
         help="race the object vs vectorized fleet engines on identical "
@@ -757,6 +910,15 @@ def main() -> None:
         rows, scale_summary = _scale_rows(
             SCALE_COUNTS_SMOKE if args.smoke else SCALE_COUNTS,
             num_frames=60 if args.smoke else 120,
+        )
+    elif args.contended:
+        counts = (
+            (1, 2, 4, 6, 8, 12, 16)
+            if args.smoke
+            else (1, 2, 4, 6, 8, 12, 16, 24, 32)
+        )
+        rows, knees = _contended_rows(
+            counts, num_frames=60 if args.smoke else 300
         )
     elif args.codec:
         counts = (
@@ -820,6 +982,42 @@ def main() -> None:
     if args.scale:
         scale_summary["smoke"] = args.smoke
         write_bench_json("fleet_scale", scale_summary)
+        return
+    if args.contended:
+        shift = (
+            knees["fair"] / knees["codec"]
+            if knees["codec"]
+            else float("inf")
+        )
+        print(
+            f"# capacity knee @ {KNEE_FPS:.0f} fps on the shared cell: "
+            f"codec={knees['codec']} clients, "
+            f"fair={knees['fair']} clients ({shift:.2f}x)"
+        )
+        if not knees["codec"]:
+            # shift would be inf — a vacuous pass; the codec-alone arm
+            # falling below real time everywhere means the cell or the
+            # codec regressed, not that fairness won
+            raise SystemExit(
+                f"codec-alone capacity knee is 0 (no swept client count "
+                f"held {KNEE_FPS:.0f} fps) — the fairness gate is vacuous"
+            )
+        if shift < CONTENDED_MIN_KNEE_SHIFT:
+            raise SystemExit(
+                f"fair-rate capacity knee only {shift:.2f}x the "
+                f"codec-alone one (expected >= "
+                f"{CONTENDED_MIN_KNEE_SHIFT}x)"
+            )
+        _assert_contended_off_switch_golden()
+        write_bench_json(
+            "fleet_contended",
+            {
+                "knee_fps": KNEE_FPS,
+                "knees": knees,
+                "knee_shift": round(shift, 3),
+                "smoke": args.smoke,
+            },
+        )
         return
     if args.codec:
         shift = (

@@ -95,6 +95,9 @@ class DispatchContext:
     now: float = 0.0
     codec: object = None  # CodecModel the fleet's clients ship under
     client_tier: object = None  # the asking client's own hardware (hetero)
+    # medium name -> SharedLink: live occupancy of shared uplinks (cell /
+    # backhaul).  None or empty when every spoke is private.
+    media: Optional[Dict[str, object]] = None
 
 
 class RoundRobinDispatch:
@@ -126,6 +129,16 @@ class LatencyWeightedDispatch:
     name = "latency_weighted"
 
     def assign(self, client_id: int, ctx: DispatchContext) -> str:
+        # live queue delay of each shared medium, priced onto any wire
+        # leg that crosses it (probe-side only: the plan cache never
+        # keys on backlog, and with no shared media this is None — the
+        # exact historical probe)
+        backlog = (
+            {m: med.queue_delay(ctx.now) for m, med in ctx.media.items()}
+            if ctx.media
+            else None
+        )
+
         def predicted(edge: str) -> float:
             sub = edge_subtopology(
                 ctx.topo, edge, ctx.link_table, client_tier=ctx.client_tier
@@ -136,6 +149,7 @@ class LatencyWeightedDispatch:
                 ctx.policy,
                 occupancy={edge: ctx.assignments.get(edge, 0)},
                 codec=ctx.codec,
+                link_backlog=backlog,
             )
             return rep.total_time
 

@@ -369,6 +369,100 @@ class BatchingSlotServer:
         return self.admitted / self.batches if self.batches else 0.0
 
 
+class SharedLink:
+    """A contended shared transmission medium (cell sector / backhaul).
+
+    The :class:`SlotServer` idea generalized to links: every wire leg
+    crossing a link that names this medium occupies one of ``capacity``
+    transmission slots for its full wire time.  Unlike a slot server,
+    admissions are offered at each transmission's *uncontended
+    completion time* (``due`` — the engines already charge the wire
+    time inside the plan's sampled total), in event-pop order, and dues
+    are NOT required to be monotone (downlink dues are finish times,
+    which interleave).  :meth:`admit` returns the *extra* delay beyond
+    ``due``:
+
+    * a free slot can still complete the transmission by its due time
+      (``free + service <= due``, i.e. the medium was idle when the
+      transmission would have started) — the slot is held until ``due``
+      and the extra delay is exactly ``0.0``, so the caller's untouched
+      arithmetic path is bit-for-bit the private-spoke fleet;
+    * otherwise the transmission serializes behind the queue: it
+      completes at ``free + service`` and the difference is returned.
+
+    ``capacity == 0`` is the *unlimited* medium: occupancy is counted
+    (``admitted`` / ``busy_time``) but no slot state exists and the
+    extra delay is always ``0.0`` — the off-switch golden in
+    tests/test_contention.py.
+    """
+
+    def __init__(self, name: str, capacity: int = 0):
+        self.name = name
+        self.capacity = max(int(capacity), 0)
+        self._slots = [0.0] * self.capacity  # slot free times (min-heap)
+        heapq.heapify(self._slots)
+        self.admitted = 0  # transmissions offered to the medium
+        self.contended = 0  # transmissions that had to queue
+        self.busy_time = 0.0  # total wire seconds carried
+        self.total_wait = 0.0  # total extra delay imposed
+        # optional repro.cluster.telemetry.Telemetry sink; None is the
+        # golden default (hook sites guarded like the slot servers')
+        self.telemetry = None
+
+    def queue_delay(self, now: float) -> float:
+        """Extra delay a transmission due now would see — the live
+        occupancy signal dispatch and the migration predictor read."""
+        if not self._slots:
+            return 0.0
+        free = self._slots[0]
+        return free - now if free > now else 0.0
+
+    def admit(self, due: float, service: float) -> float:
+        """Offer one transmission of ``service`` wire seconds that
+        would complete uncontended at ``due``; returns the extra delay
+        (exactly ``0.0`` whenever the medium is uncontended)."""
+        if service <= 0.0:
+            return 0.0
+        self.admitted += 1
+        self.busy_time += service
+        if not self._slots:  # unlimited: counted, never queued
+            return 0.0
+        free = self._slots[0]
+        if free + service <= due:
+            # idle slot: hold it through the transmission's own window
+            # and return a literal 0.0 — no float round-trip via
+            # (due - service) + service, which would not equal due
+            heapq.heapreplace(self._slots, due)
+            if self.telemetry is not None:
+                self.telemetry.occupancy_sample(f"link.{self.name}", due, 0.0)
+            return 0.0
+        completion = free + service
+        heapq.heapreplace(self._slots, completion)
+        wait = completion - due
+        self.contended += 1
+        self.total_wait += wait
+        if self.telemetry is not None:
+            self.telemetry.occupancy_sample(f"link.{self.name}", due, wait)
+        return wait
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.admitted if self.admitted else 0.0
+
+
+def build_media(topo: Topology) -> Dict[str, SharedLink]:
+    """One :class:`SharedLink` per distinct medium name the topology
+    declares (insertion order; first declaration fixes the capacity).
+    Empty on every private-spoke topology — the engines skip the whole
+    contention path, which is what keeps it a zero-cost feature when
+    off."""
+    media: Dict[str, SharedLink] = {}
+    for link in topo.links.values():
+        if link.medium and link.medium not in media:
+            media[link.medium] = SharedLink(link.medium, link.medium_capacity)
+    return media
+
+
 # one (link name, drawn latency) pair per plan leg — what a client
 # actually observed, fed to the drift detector
 ObservedLegs = Tuple[Tuple[str, float], ...]
@@ -407,11 +501,15 @@ class LinkTable:
         bandwidth: Optional[float] = None,
     ) -> Link:
         old = self._links[name]
+        # dataclasses.replace-style reconstruction: drift only touches
+        # the wire parameters, shared-medium membership is preserved
         new = Link(
             name=name,
             bandwidth=old.bandwidth if bandwidth is None else bandwidth,
             latency=old.latency if latency is None else latency,
             jitter=old.jitter if jitter is None else jitter,
+            medium=old.medium,
+            medium_capacity=old.medium_capacity,
         )
         self._links[name] = new
         self.version += 1

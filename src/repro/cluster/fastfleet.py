@@ -92,6 +92,7 @@ from repro.cluster.events import (
     BatchingSlotServer,
     LinkTable,
     SlotServer,
+    build_media,
 )
 from repro.cluster.migration import MigrationConfig, MigrationController
 from repro.cluster.plancache import PlanCache, topology_fingerprint
@@ -262,12 +263,24 @@ def run_fleet_vectorized(
         ClientResult,
         EdgeLoad,
         FleetResult,
+        LinkLoad,
         ServiceDrift,
+        plan_media,
     )
 
     N = num_clients
     cache = cache if cache is not None else PlanCache()
     link_table = LinkTable(topo)
+    # shared media (contended cells / backhauls): one SharedLink per
+    # distinct medium name; media_of maps link name -> SharedLink so
+    # plan_media can resolve each plan's wire legs.  Empty on topologies
+    # without shared media — every contention branch below is then dead.
+    media = build_media(topo)
+    media_of = {
+        link.name: media[link.medium]
+        for link in topo.links.values()
+        if link.medium
+    }
     q = _ShimQueue()
     heap = q.heap
     home = topo.home
@@ -301,7 +314,7 @@ def run_fleet_vectorized(
         # initial cache misses); batching servers report occupancy and
         # batch sizes through the shared events.py code — only the
         # inlined FIFO path below needs explicit hook calls
-        tel.attach(cache=cache, servers=server_list)
+        tel.attach(cache=cache, servers=server_list + list(media.values()))
 
     # --- struct-of-arrays server state (FIFO fast path) -------------------
     # the heaps ALIAS the SlotServer's own lists (mid-run load() reads by
@@ -332,6 +345,13 @@ def run_fleet_vectorized(
     probe_n = [0] * N
     wait_acc = [0.0] * N
     vidx = [0] * N
+    # shared-medium state: (SharedLink, wire seconds) tuples per plan
+    # direction, the per-frame medium delay, and whether the in-flight
+    # frame's uplink already cleared its media (one admission per frame)
+    up_media: List[tuple] = [()] * N
+    down_media: List[tuple] = [()] * N
+    med_wait = [0.0] * N
+    up_paid = [False] * N
     # pending in-flight frame (the object engine's per-frame tuple, as
     # recycled slots)
     pend_i = [0] * N
@@ -387,6 +407,7 @@ def run_fleet_vectorized(
         legs_meta[c] = legs
         has_legs[c] = bool(legs)
         leg_links[c] = tuple(ln for ln, _, _ in legs)
+        up_media[c], down_media[c] = plan_media(plan, media_of)
         pred_map: Dict[str, float] = {}
         cols_map: Dict[str, list] = {}
         for j, (ln, lat, _) in enumerate(legs):
@@ -604,6 +625,8 @@ def run_fleet_vectorized(
         pend_sampled[c] = sampled
         pend_pos[c] = pos
         wait_acc[c] = 0.0
+        med_wait[c] = 0.0
+        up_paid[c] = False
         if nvis[c]:
             vidx[c] = 0
             tm = start + (sampled - service_total[c])
@@ -682,6 +705,7 @@ def run_fleet_vectorized(
         link_table=link_table,
         assignments={},
         codec=init_codec,
+        media=media,
     )
     disp = make_dispatch(dispatch)
     # id-indexed admission memo: every client of one (edge, class) pair
@@ -696,7 +720,9 @@ def run_fleet_vectorized(
         ctx.client_tier = tier_c
         e = disp.assign(c, ctx)
         ctx.assignments[e] = ctx.assignments.get(e, 0) + 1
-        rate = RateController(codec) if codec is not None else None
+        rate = (
+            RateController(codec, client_id=c) if codec is not None else None
+        )
         if rates is not None:
             rates[c] = rate
         memo_key = (e, tier_c)
@@ -745,6 +771,7 @@ def run_fleet_vectorized(
             edges=edges,
             assignments=ctx.assignments,
             codec=init_codec,
+            media=media,
         )
 
     # --- drift injections (sequence numbers follow the admission cohort's
@@ -791,6 +818,22 @@ def run_fleet_vectorized(
             kind = payload & _KIND_MASK
             c = payload >> _KIND_BITS
             if kind == _K_VISIT:
+                if vidx[c] == 0 and up_media[c] and not up_paid[c]:
+                    # shared-uplink admission — the object engine's
+                    # visit() head, one reschedule when the cell queues
+                    up_paid[c] = True
+                    uw = 0.0
+                    for med, svc in up_media[c]:
+                        uw += med.admit(now, svc)
+                    if uw > 0.0:
+                        med_wait[c] += uw
+                        wait_acc[c] += uw
+                        heappush(
+                            heap,
+                            (now + uw, seq, (c << _KIND_BITS) | _K_VISIT),
+                        )
+                        seq += 1
+                        continue
                 vis = visits[c][vidx[c]]
                 if vis[0]:  # FIFO SlotServer: admit inline over SoA state
                     si = vis[1]
@@ -852,6 +895,19 @@ def run_fleet_vectorized(
                 start = pend_start[c]
                 wait = wait_acc[c]
                 fin = (start + pend_sampled[c]) + wait
+                if down_media[c] or (up_media[c] and not nvis[c]):
+                    # downlink (and visit-less uplink) shared-medium
+                    # admission — the object engine's finish() head
+                    mw = 0.0
+                    if not nvis[c]:
+                        for med, svc in up_media[c]:
+                            mw += med.admit(fin, svc)
+                    for med, svc in down_media[c]:
+                        mw += med.admit(fin, svc)
+                    if mw > 0.0:
+                        med_wait[c] += mw
+                        wait += mw
+                        fin += mw
                 rec_i[c].append(i)
                 rec_start[c].append(start)
                 rec_fin[c].append(fin)
@@ -871,6 +927,7 @@ def run_fleet_vectorized(
                             if has_legs[c]
                             else ()
                         ),
+                        link_wait=med_wait[c],
                     )
                 if has_legs[c]:
                     fl = blk_fl[c][pend_pos[c]]
@@ -903,7 +960,12 @@ def run_fleet_vectorized(
                         if has_legs[c]
                         else ()
                     )
-                    if rates[c].observe(i, obs, plan_obj[c]) is not None:
+                    if (
+                        rates[c].observe(
+                            i, obs, plan_obj[c], cell_wait=med_wait[c]
+                        )
+                        is not None
+                    ):
                         rate_dirty[c] = True
                 if controller is not None:
                     if nvis[c]:
@@ -1013,10 +1075,21 @@ def run_fleet_vectorized(
         duration=max((c.stats.duration for c in client_results), default=0.0),
         migration=controller.stats if controller is not None else None,
         events=processed,
+        links=[
+            LinkLoad(
+                name=m.name,
+                capacity=m.capacity,
+                admitted=m.admitted,
+                contended=m.contended,
+                busy_time=m.busy_time,
+                total_wait=m.total_wait,
+            )
+            for m in media.values()
+        ],
     )
     if tel is not None:
         tel.finish_run(
             result, rates=list(rates) if rates is not None else None
         )
-        tel.detach(cache=cache, servers=server_list)
+        tel.detach(cache=cache, servers=server_list + list(media.values()))
     return result

@@ -56,6 +56,7 @@ from repro.cluster.events import (
     EventQueue,
     LinkTable,
     SlotServer,
+    build_media,
 )
 from repro.cluster.migration import (
     MigrationConfig,
@@ -145,6 +146,25 @@ class EdgeLoad:
 
 
 @dataclasses.dataclass
+class LinkLoad:
+    """Occupancy counters of one shared transmission medium
+    (``events.SharedLink``): how much wire time it carried and how much
+    extra delay contention imposed.  Empty ``FleetResult.links`` means
+    the topology declared no shared media (every spoke private)."""
+
+    name: str
+    capacity: int  # transmission slots (0 = unlimited)
+    admitted: int  # transmissions offered
+    contended: int  # transmissions that queued
+    busy_time: float  # wire seconds carried
+    total_wait: float  # extra delay imposed
+
+    @property
+    def mean_wait(self) -> float:
+        return self.total_wait / self.admitted if self.admitted else 0.0
+
+
+@dataclasses.dataclass
 class FleetResult:
     clients: List[ClientResult]
     edges: List[EdgeLoad]
@@ -156,6 +176,9 @@ class FleetResult:
     # events/sec number `fleet_bench --events` reports, and a structural
     # invariant the vectorized engine reproduces exactly
     events: int = 0
+    # per-medium occupancy counters, in topology declaration order —
+    # byte-identical between engines (engine-equivalence audit)
+    links: List[LinkLoad] = dataclasses.field(default_factory=list)
 
     @property
     def drop_rate(self) -> float:
@@ -212,6 +235,33 @@ class FleetResult:
         return times[idx]
 
 
+def plan_media(plan: PlanReport, media_of) -> Tuple[tuple, tuple]:
+    """Aggregate a plan's per-hop wire seconds onto shared media:
+    ``(up, down)`` where each is ``((SharedLink, wire_seconds), ...)``
+    per distinct medium the plan's wire legs cross in that direction.
+    Empty tuples when the fleet declares no shared media — the private-
+    spoke fast path both engines take.  Shared by both engines so the
+    aggregation (and its float summation order) cannot diverge."""
+    if not media_of:
+        return (), ()
+    up: Dict[str, list] = {}
+    down: Dict[str, list] = {}
+    for lname, dwn, w in plan.wire_by_link:
+        med = media_of.get(lname)
+        if med is None or w <= 0.0:
+            continue
+        acc = down if dwn else up
+        slot = acc.get(med.name)
+        if slot is None:
+            acc[med.name] = [med, w]
+        else:
+            slot[1] += w
+    return (
+        tuple((m, s) for m, s in up.values()),
+        tuple((m, s) for m, s in down.values()),
+    )
+
+
 class _Client:
     """One thin client's frame loop, replaying ``sim.clock.FrameLoop``'s
     exact drop/supersede arithmetic against the shared event clock."""
@@ -226,12 +276,15 @@ class _Client:
         plan_fp,
         rate: Optional[RateController] = None,
         tier=None,
+        media_of=None,
     ):
         self.idx = idx
         self.rng = rng
         self.edge = edge
         self.home = home
         self.tier = tier  # own hardware class (hetero fleets; None = default)
+        self.media_of = media_of  # link name -> SharedLink (shared media)
+        self.med_wait = 0.0  # shared-medium delay of the in-flight frame
         self.set_plan(plan, plan_fp)
         self.events: List[FrameEvent] = []
         self.t_free = 0.0
@@ -259,6 +312,8 @@ class _Client:
             (tier, t) for tier, t in plan.compute_by_tier if tier != self.home
         )
         self.service_total = sum(t for _, t in self.visits)
+        # the wire seconds this plan offers each shared medium per frame
+        self.up_media, self.down_media = plan_media(plan, self.media_of)
 
 
 def run_fleet(
@@ -435,6 +490,16 @@ def run_fleet(
 
     cache = cache if cache is not None else PlanCache()
     link_table = LinkTable(topo)
+    # shared transmission media (cell/backhaul): one SharedLink per
+    # declared medium, plus the link-name -> medium mapping clients use
+    # to split their plans' wire legs.  Both stay empty on private-spoke
+    # topologies, and every contention hook below is gated on that.
+    media = build_media(topo)
+    media_of = {
+        link.name: media[link.medium]
+        for link in topo.links.values()
+        if link.medium
+    }
     q = EventQueue()
     servers: Dict[str, object] = {}
     for e in edges:
@@ -453,8 +518,11 @@ def run_fleet(
     tel = telemetry
     if tel is not None:
         # wire instrumentation before admission planning so the initial
-        # cache misses are observed too
-        tel.attach(cache=cache, servers=servers.values())
+        # cache misses are observed too (shared media carry the same
+        # telemetry attribute as the slot servers)
+        tel.attach(
+            cache=cache, servers=list(servers.values()) + list(media.values())
+        )
     detector = DriftDetector(
         threshold=drift_threshold,
         window=drift_window,
@@ -474,6 +542,7 @@ def run_fleet(
         link_table=link_table,
         assignments={},
         codec=init_codec,
+        media=media,
     )
     disp = make_dispatch(dispatch)
     clients: List[_Client] = []
@@ -483,7 +552,9 @@ def run_fleet(
         edge = disp.assign(c, ctx)
         ctx.assignments[edge] = ctx.assignments.get(edge, 0) + 1
         sub = edge_subtopology(topo, edge, link_table, client_tier=tier_c)
-        rate = RateController(codec) if codec is not None else None
+        rate = (
+            RateController(codec, client_id=c) if codec is not None else None
+        )
         plan, _ = cache.get_or_plan(
             comp_used,
             sub,
@@ -501,6 +572,7 @@ def run_fleet(
                 topology_fingerprint(sub),
                 rate=rate,
                 tier=tier_c,
+                media_of=media_of,
             )
         )
     if tel is not None:
@@ -526,6 +598,7 @@ def run_fleet(
             edges=edges,
             assignments=ctx.assignments,
             codec=init_codec,
+            media=media,
         )
 
     # --- event handlers ---------------------------------------------------
@@ -566,6 +639,7 @@ def run_fleet(
             start = max(arrival, client.t_free)
         sampled, observed = link_table.sample_plan_latency(client.plan, client.rng)
         client.pending = (i, arrival, start, sampled, observed)
+        client.med_wait = 0.0
         if client.visits:
             q.schedule(
                 start + (sampled - client.service_total),
@@ -574,7 +648,27 @@ def run_fleet(
         else:
             q.schedule(start + sampled, lambda c=client: finish(c, 0.0))
 
-    def visit(client: _Client, vidx: int, wait_acc: float) -> None:
+    def visit(
+        client: _Client, vidx: int, wait_acc: float, up_paid: bool = False
+    ) -> None:
+        if vidx == 0 and client.up_media and not up_paid:
+            # offer this frame's uplink wire time to its shared media at
+            # the time it would have cleared them uncontended (this very
+            # event).  A busy cell delays the request's arrival at the
+            # edge: one rescheduled visit carrying the delay as wait.
+            # An idle (or unlimited) medium returns a literal 0.0 and
+            # the original path continues untouched — bit-for-bit the
+            # private-spoke fleet.
+            uw = 0.0
+            for med, svc in client.up_media:
+                uw += med.admit(q.now, svc)
+            if uw > 0.0:
+                client.med_wait += uw
+                q.schedule(
+                    q.now + uw,
+                    lambda c=client, w=wait_acc + uw: visit(c, 0, w, True),
+                )
+                return
         tier, service = client.visits[vidx]
         arrived = q.now
 
@@ -624,6 +718,22 @@ def run_fleet(
         # canonical finish: waits appended after the resampled plan total,
         # so a zero-wait run is bit-identical to the analytic FrameLoop
         fin = (start + sampled) + wait
+        if client.down_media or (client.up_media and not client.visits):
+            # downlink legs (and uplink legs of visit-less plans, which
+            # have no visit event to admit them at) clear their shared
+            # media at the uncontended finish time; contention stretches
+            # the frame synchronously.  mw == 0.0 leaves wait/fin exactly
+            # untouched — the off-switch golden.
+            mw = 0.0
+            if not client.visits:
+                for med, svc in client.up_media:
+                    mw += med.admit(fin, svc)
+            for med, svc in client.down_media:
+                mw += med.admit(fin, svc)
+            if mw > 0.0:
+                client.med_wait += mw
+                wait += mw
+                fin += mw
         client.events.append(
             FrameEvent(i, arrival, start, fin, i - client.last_processed)
         )
@@ -640,6 +750,7 @@ def run_fleet(
                 fin,
                 client.plan,
                 tuple(d for _, d in observed),
+                link_wait=client.med_wait,
             )
         if observed:
             if detector.observe(client.idx, client.plan, observed):
@@ -660,7 +771,12 @@ def run_fleet(
             # motion index; a switch re-plans (same codec-keyed cache)
             # before the next frame starts.  The controller's own
             # `switches` counter is the single source of truth.
-            if client.rate.observe(i, observed, client.plan) is not None:
+            if (
+                client.rate.observe(
+                    i, observed, client.plan, cell_wait=client.med_wait
+                )
+                is not None
+            ):
                 client.rate_dirty = True
         if controller is not None and client.visits:
             # report the measured non-plan time to the predictor's
@@ -757,6 +873,17 @@ def run_fleet(
         duration=max((c.stats.duration for c in client_results), default=0.0),
         migration=controller.stats if controller is not None else None,
         events=q.processed,
+        links=[
+            LinkLoad(
+                name=m.name,
+                capacity=m.capacity,
+                admitted=m.admitted,
+                contended=m.contended,
+                busy_time=m.busy_time,
+                total_wait=m.total_wait,
+            )
+            for m in media.values()
+        ],
     )
     if tel is not None:
         tel.finish_run(
@@ -765,7 +892,9 @@ def run_fleet(
                 [c.rate for c in clients] if codec is not None else None
             ),
         )
-        tel.detach(cache=cache, servers=servers.values())
+        tel.detach(
+            cache=cache, servers=list(servers.values()) + list(media.values())
+        )
     return result
 
 

@@ -229,6 +229,7 @@ class MigrationController:
         edges: Optional[List[str]] = None,
         assignments: Optional[Dict[str, int]] = None,
         codec=None,
+        media: Optional[Dict[str, object]] = None,
     ):
         self.config = config
         self.topo = topo
@@ -252,6 +253,18 @@ class MigrationController:
         # passes each client's live operating point per `consider`; this
         # is the fleet-level default for direct use)
         self.codec = codec
+        # shared-medium occupancy (medium name -> SharedLink).  The
+        # per-edge spoke medium is resolved once; its live queue_delay
+        # joins the prediction OUTSIDE the scoring memo (occupancy is a
+        # time-varying signal, never part of a plan's identity).  With
+        # no shared media both are empty and the predictor is exact.
+        self.media = media if media is not None else {}
+        self._edge_medium = {
+            e: self.media.get(
+                topo.link_between(topo.home, e).medium
+            )
+            for e in self.edges
+        }
         self._disp = (
             None
             if config.target_policy == "predicted"
@@ -265,6 +278,7 @@ class MigrationController:
             servers=self.servers,
             link_table=self.link_table,
             assignments=self.assignments,
+            media=self.media or None,
         )
         self._dwell: Dict[int, int] = {}
         # per-edge (EWMA, last-sample time) of measured per-frame waits
@@ -416,6 +430,13 @@ class MigrationController:
                 excess = (1.0 - w) * excess + w * value
             t += excess
             t -= credit
+        med = self._edge_medium.get(edge)
+        if med is not None:
+            # live shared-uplink backlog on this edge's spoke: a
+            # congested cell repels movers exactly like a deep queue.
+            # Deliberately outside the scoring memo (occupancy is not
+            # plan identity) and exactly 0.0 on an idle medium.
+            t += med.queue_delay(now)
         return t
 
     # -- state-transfer pricing ---------------------------------------------

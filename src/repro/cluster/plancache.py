@@ -97,7 +97,10 @@ def topology_fingerprint(topo: Topology) -> Tuple:
         for pname, t in topo.tiers.items()
     )
     links = tuple(
-        (a, b, l.name, l.bandwidth, l.latency, l.jitter)
+        # shared-medium fields ride at the END so positional consumers
+        # (invalidate_link reads entry[2] == link name) stay valid
+        (a, b, l.name, l.bandwidth, l.latency, l.jitter, l.medium,
+         l.medium_capacity)
         for (a, b), l in topo.links.items()
     )
     w = topo.wrapper

@@ -380,13 +380,17 @@ class Telemetry:
         fin: float,
         plan,
         draws: Tuple[float, ...],
+        link_wait: float = 0.0,
     ) -> None:
         """Build the span tuple of one processed frame.
 
         ``draws`` are the frame's per-leg latency samples in
         ``plan.legs`` order (empty when the plan has no legs); both
         engines pass bit-identical floats, so the resulting spans are
-        engine-independent by construction.
+        engine-independent by construction.  ``link_wait`` is the
+        frame's shared-medium queue delay (contended cell / backhaul);
+        it is attributed to the uplink span — that is where the client
+        experiences it — and is 0.0 on private spokes.
         """
         client_b, up_b, down_b, dec_b, comp_b, raw_up = self._bases(plan)
         # jitter deltas: each leg's draw replaces its charged latency
@@ -406,6 +410,8 @@ class Telemetry:
         else:
             up = up_b
             down = down_b
+        if link_wait:
+            up = up + link_wait
         # queue wait (FIFO, incl. throttle inflation) vs gather dwell +
         # fused-launch inflation (batching edges)
         q_w = 0.0
@@ -461,6 +467,11 @@ class Telemetry:
             m.gauge(f"edge.peak_load.{e.name}").set(e.peak_load)
             m.gauge(f"edge.busy_s.{e.name}").set(e.busy_time)
             m.gauge(f"edge.admitted.{e.name}").set(e.admitted)
+        for lk in getattr(result, "links", ()) or ():
+            m.gauge(f"link.busy_s.{lk.name}").set(lk.busy_time)
+            m.gauge(f"link.admitted.{lk.name}").set(lk.admitted)
+            m.gauge(f"link.contended.{lk.name}").set(lk.contended)
+            m.gauge(f"link.total_wait_s.{lk.name}").set(lk.total_wait)
 
     # -- verification -------------------------------------------------------
 

@@ -206,6 +206,94 @@ def delta_encode_batched(
 
 
 # ---------------------------------------------------------------------------
+# entropy stage: per-tile significant-bit widths
+# ---------------------------------------------------------------------------
+
+
+def _sig_width_kernel(d_ref, w_out):
+    """Significant-bit width of the tile's max |residual| word, read as
+    uint32 — the side information ``ref.entropy_encode_words`` writes
+    per tile.  ``(m >= 2**k)`` summed over k in [0, 32) counts exactly
+    ``m.bit_length()`` without a loop-carried dependency (pure VPU
+    compare + reduce, no integer log)."""
+    words = d_ref[...].astype(jnp.uint32)
+    m = jnp.max(words)
+    thresholds = jnp.uint32(2) ** jnp.arange(32, dtype=jnp.uint32)
+    width = jnp.sum((m >= thresholds).astype(jnp.int32))
+    w_out[...] = jnp.full(w_out.shape, width, dtype=jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_h", "block_w", "interpret")
+)
+def significant_bit_widths(
+    delta_bits: jnp.ndarray,  # (H, W) i32 XOR residual plane
+    *,
+    block_h: int = DEFAULT_BLOCK_H,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = DEFAULT_INTERPRET,
+) -> jnp.ndarray:
+    """Per-tile significant-bit widths of a residual plane:
+    ``(ceil(H/bh), ceil(W/bw)) i32`` in [0, 32].  This is the entropy
+    stage's device-side half — the coded size of each tile is
+    ``ceil(tile_samples * width / 8) + 1`` bytes, so the host can price
+    (and the byte packer emit) the stream without touching the full
+    plane again.  Pad tiles are all-zero and report width 0."""
+    d = _pad_plane(delta_bits.astype(jnp.int32), block_h, block_w)
+    hp, wp = d.shape
+    grid = (hp // block_h, wp // block_w)
+    tile = pl.BlockSpec((block_h, block_w), lambda i, j: (i, j))
+    cell = pl.BlockSpec((1, 1), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _sig_width_kernel,
+        grid=grid,
+        in_specs=[tile],
+        out_specs=cell,
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
+        interpret=interpret,
+    )(d)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_h", "block_w", "interpret", "path")
+)
+def significant_bit_widths_batched(
+    deltas: jnp.ndarray,  # (B, H, W) i32
+    *,
+    block_h: int = DEFAULT_BLOCK_H,
+    block_w: int = DEFAULT_BLOCK_W,
+    interpret: bool = DEFAULT_INTERPRET,
+    path: str = "grid",
+) -> jnp.ndarray:
+    """B clients' residual planes width-scanned in one fused launch;
+    the B=1 slice is bit-for-bit :func:`significant_bit_widths`."""
+    if path == "vmap":
+        fn = functools.partial(
+            significant_bit_widths,
+            block_h=block_h,
+            block_w=block_w,
+            interpret=interpret,
+        )
+        return jax.vmap(fn)(deltas)
+    if path != "grid":
+        raise ValueError(f"unknown path {path!r}")
+    b = deltas.shape[0]
+    d = _pad_plane(deltas.astype(jnp.int32), block_h, block_w)
+    hp, wp = d.shape[1:]
+    grid = (b, hp // block_h, wp // block_w)
+    tile = pl.BlockSpec((1, block_h, block_w), lambda bi, i, j: (bi, i, j))
+    cell = pl.BlockSpec((1, 1, 1), lambda bi, i, j: (bi, i, j))
+    return pl.pallas_call(
+        _sig_width_kernel,
+        grid=grid,
+        in_specs=[tile],
+        out_specs=cell,
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.int32),
+        interpret=interpret,
+    )(d)
+
+
+# ---------------------------------------------------------------------------
 # quantize + pack
 # ---------------------------------------------------------------------------
 

@@ -85,6 +85,14 @@ class CodecModel:
     min_payload_nbytes: int = 4096
     encode_flops_per_byte: float = 0.0
     decode_flops_per_byte: float = 0.0
+    # entropy stage over the delta residuals (codec.ref's zero-run /
+    # significant-bit-width coding of the XOR residual words): shrinks
+    # delta frames by `entropy_ratio` (measured on a real sequence) at
+    # `entropy_flops_per_byte` extra CPU per raw byte on each side.
+    # Off by default — the exact historical model.
+    entropy_coding: bool = False
+    entropy_ratio: float = 1.0
+    entropy_flops_per_byte: float = 0.0
 
     def __post_init__(self) -> None:
         if not 1 <= self.quant_bits <= BITS_RAW:
@@ -97,6 +105,10 @@ class CodecModel:
             raise ValueError("byte bounds must be >= 0")
         if self.encode_flops_per_byte < 0 or self.decode_flops_per_byte < 0:
             raise ValueError("flops-per-byte must be >= 0")
+        if not 0.0 < self.entropy_ratio <= 1.0:
+            raise ValueError("entropy_ratio must be in (0, 1]")
+        if self.entropy_flops_per_byte < 0:
+            raise ValueError("entropy_flops_per_byte must be >= 0")
 
     # -- compression ratios -------------------------------------------------
 
@@ -111,7 +123,12 @@ class CodecModel:
         ship, each at the quantized width — the composed quantized-delta
         format of ``codec.ref.encode_frame`` (codes delta'd in code
         space, NOT the 32-bit XOR residuals of the lossless f32 path),
-        whose exact byte count matches this ratio (tested)."""
+        whose exact byte count matches this ratio (tested).  With the
+        entropy stage armed, delta payloads shrink further by
+        ``entropy_ratio`` (keyframes ship dense code words, which the
+        width coder cannot touch — only residuals are sparse)."""
+        if self.entropy_coding:
+            return self.change_density * self.keyframe_ratio * self.entropy_ratio
         return self.change_density * self.keyframe_ratio
 
     @property
@@ -161,10 +178,15 @@ class CodecModel:
 
     def encode_time(self, nbytes: int, tier: Tier) -> float:
         """Seconds to encode ``nbytes`` of raw payload on ``tier`` —
-        charged at the payload's source."""
+        charged at the payload's source.  The entropy stage, when
+        armed, adds its per-byte cost here (the coder runs over the
+        residual plane after the quantizer)."""
         if not self.applies(nbytes):
             return 0.0
-        return self.encode_flops_per_byte * nbytes / self._tier_rate(tier)
+        fpb = self.encode_flops_per_byte
+        if self.entropy_coding:
+            fpb = fpb + self.entropy_flops_per_byte
+        return fpb * nbytes / self._tier_rate(tier)
 
     def decode_time(self, nbytes: int, tier: Tier) -> float:
         """Seconds to decode back to the raw payload on ``tier`` —
@@ -172,7 +194,10 @@ class CodecModel:
         ``compute_by_tier`` and therefore occupies a service slot)."""
         if not self.applies(nbytes):
             return 0.0
-        return self.decode_flops_per_byte * nbytes / self._tier_rate(tier)
+        fpb = self.decode_flops_per_byte
+        if self.entropy_coding:
+            fpb = fpb + self.entropy_flops_per_byte
+        return fpb * nbytes / self._tier_rate(tier)
 
     def state_encode_time(self, nbytes: int, tier: Tier) -> float:
         """Encode cost of a one-shot state transfer (quantizer only)."""

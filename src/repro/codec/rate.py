@@ -128,6 +128,31 @@ class CodecConfig:
     motion: Tuple[float, ...] = ()
     density_gain: float = DEFAULT_DENSITY_GAIN
     density_floor: float = DEFAULT_DENSITY_FLOOR
+    # -- shared-cell fairness -------------------------------------------
+    # cell_threshold (seconds of smoothed shared-medium wait per ladder
+    # step) arms the contention signal: a client queuing on a congested
+    # cell escalates down the bits ladder even when its leg draws look
+    # clean (medium waits are structurally invisible to the pressure
+    # EWMA — they are queueing, not jitter).  inf = off, the exact
+    # pressure-only controller.  The EWMA weights each wait sample by
+    # the client's CURRENT wire ratio, so the heaviest payload on the
+    # cell feels the most pressure and backs off first (self-balancing
+    # fairness).  cell_stagger spreads per-client thresholds
+    # (thr_i = cell_threshold * (1 + stagger * client_id)) so equal
+    # clients shed in a deterministic order instead of oscillating in
+    # lockstep.
+    cell_threshold: float = float("inf")
+    cell_alpha: float = 0.3
+    cell_stagger: float = 0.0
+    # -- keyframe loss / resync -----------------------------------------
+    # resync_bound > 0 couples observed frame drops back into keyframe
+    # spacing: when the smoothed drop signal exceeds drop_threshold the
+    # keyframe interval is clamped to resync_bound, so a decoder that
+    # lost a reference is guaranteed a fresh keyframe within that many
+    # frames.  0 = off (exact historical ladder).
+    resync_bound: int = 0
+    drop_alpha: float = 0.3
+    drop_threshold: float = 0.5
 
     def __post_init__(self) -> None:
         if not self.bits_ladder or not self.interval_ladder:
@@ -156,6 +181,18 @@ class CodecConfig:
             raise ValueError("pressure_threshold must be > 0")
         if self.min_dwell_frames < 0:
             raise ValueError("min_dwell_frames must be >= 0")
+        if self.cell_threshold <= 0.0:
+            raise ValueError("cell_threshold must be > 0 (inf = off)")
+        if not 0.0 < self.cell_alpha <= 1.0:
+            raise ValueError("cell_alpha must be in (0, 1]")
+        if self.cell_stagger < 0.0:
+            raise ValueError("cell_stagger must be >= 0")
+        if self.resync_bound < 0:
+            raise ValueError("resync_bound must be >= 0 (0 = off)")
+        if not 0.0 < self.drop_alpha <= 1.0:
+            raise ValueError("drop_alpha must be in (0, 1]")
+        if self.drop_threshold <= 0.0:
+            raise ValueError("drop_threshold must be > 0")
 
 
 def identity_config() -> CodecConfig:
@@ -167,9 +204,16 @@ def identity_config() -> CodecConfig:
 class RateController:
     """One client's codec operating point over time (deterministic)."""
 
-    def __init__(self, cfg: CodecConfig):
+    def __init__(self, cfg: CodecConfig, client_id: int = 0):
         self.cfg = cfg
+        self.client_id = client_id
         self._pressure = 0.0
+        # shared-cell wait EWMA, weighted by the current wire ratio
+        # (heaviest payload feels the most pressure — see CodecConfig)
+        self._cell = 0.0
+        # smoothed frame-drop signal: EWMA of (frame-index gap - 1)
+        self._drop = 0.0
+        self._last_idx: Optional[int] = None
         self._frames_since_switch = 0
         self.switches = 0
         # ladder-transition log, one (frame_idx, old_bits, new_bits)
@@ -198,14 +242,37 @@ class RateController:
 
     def _interval_for(self, density: float) -> int:
         c = self.cfg
+        interval = c.interval_ladder[-1]
         for i, cut in enumerate(c.density_cuts):
             if density > cut:
-                return c.interval_ladder[i]
-        return c.interval_ladder[-1]
+                interval = c.interval_ladder[i]
+                break
+        if c.resync_bound > 0 and self._drop > c.drop_threshold:
+            # a lossy stream needs fresh references: clamp keyframe
+            # spacing so the decoder resyncs within the bound
+            interval = min(interval, c.resync_bound)
+        return interval
 
     def _bits_for(self) -> int:
         c = self.cfg
         idx = int(self._pressure / c.pressure_threshold)
+        if c.cell_threshold != float("inf"):
+            if self._cell > 0.0:
+                thr = c.cell_threshold * (
+                    1.0 + c.cell_stagger * self.client_id
+                )
+                idx += int(self._cell / thr)
+            # AIMD asymmetry: escalating coarser is immediate (the cell
+            # is congested NOW), but recovery toward finer bits moves
+            # one rung per switch — a client that backs off stops
+            # feeling the cell (its weighted samples shrink with its
+            # ratio), so unbounded recovery would slam the whole cohort
+            # back to the finest point in lockstep and flap the cell.
+            cur = getattr(self, "model", None)
+            if cur is not None and cur.quant_bits in c.bits_ladder:
+                cur_idx = c.bits_ladder.index(cur.quant_bits)
+                if idx < cur_idx:
+                    idx = cur_idx - 1
         return c.bits_ladder[min(max(idx, 0), len(c.bits_ladder) - 1)]
 
     def _operating_point(self, frame_idx: int) -> CodecModel:
@@ -220,12 +287,20 @@ class RateController:
     # -- the loop -----------------------------------------------------------
 
     def observe(
-        self, frame_idx: int, observed, plan
+        self, frame_idx: int, observed, plan, cell_wait: float = 0.0
     ) -> Optional[CodecModel]:
         """Feed one processed frame's observed leg draws (the same
         tuples the drift detector sees) against the plan that charged
         them.  Returns the new :class:`CodecModel` when the operating
-        point switches, else None."""
+        point switches, else None.
+
+        ``cell_wait`` is the frame's shared-medium queue delay (0.0 on
+        private spokes): contention is queueing, not jitter, so it never
+        reaches the leg draws — this side channel is the only way the
+        controller can see a congested cell.  The sample is weighted by
+        the client's current wire ratio before entering the cell EWMA,
+        so heavier payloads back off first.
+        """
         if not self.cfg.adapt:
             return None
         charged = sum(leg.latency for leg in plan.legs)
@@ -234,6 +309,19 @@ class RateController:
             excess = max(drawn / charged - 1.0, 0.0)
             a = self.cfg.pressure_alpha
             self._pressure = a * excess + (1.0 - a) * self._pressure
+        if self.cfg.cell_threshold != float("inf"):
+            ca = self.cfg.cell_alpha
+            sample = cell_wait * self.model.ratio
+            self._cell = ca * sample + (1.0 - ca) * self._cell
+        if self.cfg.resync_bound > 0:
+            gap = (
+                frame_idx - self._last_idx - 1
+                if self._last_idx is not None
+                else 0
+            )
+            self._last_idx = frame_idx
+            da = self.cfg.drop_alpha
+            self._drop = da * gap + (1.0 - da) * self._drop
         self._frames_since_switch += 1
         proposal = self._operating_point(frame_idx)
         if (

@@ -233,6 +233,12 @@ class PlanReport:
     # up/down direction of every recorded latency leg, index-aligned
     # with ``legs`` (True = downlink-direction hop relative to home)
     leg_down: Tuple[bool, ...] = ()
+    # per-hop wire occupancy: (link name, is_downlink, wire seconds) for
+    # every wire crossing this plan charges — what the fleet engines
+    # offer to a SharedLink when the link names a shared medium (the
+    # same ``wire_n / bandwidth`` terms as the wire_up/wire_down
+    # breakdown, kept per link so contention can be charged per medium)
+    wire_by_link: Tuple[Tuple[str, bool, float], ...] = ()
 
     @property
     def fps(self) -> float:
@@ -277,12 +283,21 @@ class CostEngine:
         topology: Topology,
         occupancy: Optional[Dict[str, int]] = None,
         codec=None,
+        link_backlog: Optional[Dict[str, float]] = None,
     ):
         self.topology = topology
         self.occupancy: Dict[str, int] = dict(occupancy) if occupancy else {}
         # a repro.codec.CodecModel (or None): payload compression priced
         # into every transfer leg — see the module docstring
         self.codec = codec
+        # live shared-medium backlog (medium name -> seconds of queue
+        # delay a transmission due now would see): wire legs crossing a
+        # link with that medium charge it on top of their wire time.
+        # None / empty (the default) is the exact uncontended model —
+        # this is a probe-side knob (fleet dispatch), never cached.
+        self.link_backlog: Dict[str, float] = (
+            dict(link_backlog) if link_backlog else {}
+        )
 
     # -- small shared pieces ------------------------------------------------
 
@@ -377,6 +392,10 @@ class CostEngine:
                 t += link.latency
         t += serialization_time(wire_nbytes, topo.wrapper)
         t += wire_time(wire_nbytes, links)
+        if self.link_backlog:
+            for link in links:
+                if link.medium:
+                    t += self.link_backlog.get(link.medium, 0.0)
         return t
 
     def transfer_scalar(
@@ -464,6 +483,7 @@ class CostEngine:
         compute_by_tier: Dict[str, float] = {}  # insertion = first-visit order
         bd: Dict[str, float] = {}  # span-attribution breakdown
         leg_down: List[bool] = []  # direction flag per entry of `legs`
+        wire_links: List[Tuple[str, bool, float]] = []  # per-hop wire time
 
         def _bd(key: str, v: float) -> None:
             bd[key] = bd.get(key, 0.0) + v
@@ -502,7 +522,15 @@ class CostEngine:
             _bd("wrapper", ser_t)
             network_t += wire_time(wire_n, links)
             for link, dwn in zip(links, downs):
-                _bd("wire_down" if dwn else "wire_up", wire_n / link.bandwidth)
+                w = wire_n / link.bandwidth
+                _bd("wire_down" if dwn else "wire_up", w)
+                wire_links.append((link.name, dwn, w))
+                if self.link_backlog and link.medium:
+                    # live shared-medium occupancy: this transmission
+                    # queues behind the backlog already committed to
+                    # the medium (dispatch probes price with this; the
+                    # cached per-client plans never carry it)
+                    network_t += self.link_backlog.get(link.medium, 0.0)
             # byte accounting is per wire hop relative to home (a payload
             # crossing two legs is counted on each): a hop whose far end
             # lies on its near end's route home is downlink — this keeps
@@ -588,4 +616,5 @@ class CostEngine:
             compute_by_tier=tuple(compute_by_tier.items()),
             breakdown=tuple(bd.items()),
             leg_down=tuple(leg_down),
+            wire_by_link=tuple(wire_links),
         )

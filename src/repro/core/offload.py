@@ -106,6 +106,7 @@ def plan(
     planner: Optional[str] = None,
     occupancy: Optional[Dict[str, int]] = None,
     codec=None,
+    link_backlog: Optional[Dict[str, float]] = None,
 ) -> PlanReport:
     """Choose placements under a policy and return the cost report.
 
@@ -120,10 +121,17 @@ def plan(
     ``codec`` (a ``repro.codec.CodecModel``) makes every transfer leg
     codec-aware: compressed wire bytes plus encode/decode compute at
     the payload's endpoints — which can flip AUTO's decision on links
-    where raw payloads drowned the offload win.
+    where raw payloads drowned the offload win.  ``link_backlog``
+    (shared-medium name -> seconds of live queue delay) prices wire
+    legs against current link occupancy the same way ``occupancy``
+    prices contended tiers; both are probe-side knobs — the plan cache
+    never keys on them, so dispatchers pass them only on uncached
+    probes.
     """
     topo = as_topology(env)
-    engine = CostEngine(topo, occupancy=occupancy, codec=codec)
+    engine = CostEngine(
+        topo, occupancy=occupancy, codec=codec, link_backlog=link_backlog
+    )
     n = len(comp.stages)
     if policy is Policy.LOCAL:
         return engine.evaluate(comp, (topo.home,) * n)

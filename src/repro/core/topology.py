@@ -66,12 +66,24 @@ class Tier:
 
 @dataclasses.dataclass(frozen=True)
 class Link:
-    """A network link between tiers."""
+    """A network link between tiers.
+
+    ``medium`` names the shared physical medium (cell sector, backhaul
+    trunk) this link's wire legs contend on: every link carrying the
+    same non-empty medium name shares ``medium_capacity`` concurrent
+    transmission slots (``cluster.events.SharedLink``).  The empty
+    string is a private spoke — the historical model and the exact
+    off-switch — and ``medium_capacity == 0`` with a medium name is an
+    unlimited shared medium: occupancy is *counted* but nothing ever
+    queues, which must be bit-for-bit the private fleet (golden-tested).
+    """
 
     name: str
     bandwidth: float  # bytes / second
     latency: float  # one-way, seconds
     jitter: float = 0.0  # stddev of latency, seconds (Wi-Fi interference)
+    medium: str = ""  # shared-medium name ("" = private spoke)
+    medium_capacity: int = 0  # concurrent transmissions (0 = unlimited)
 
     def transfer_time(self, nbytes: int, rng=None) -> float:
         """One-way payload time; pass ``rng`` to draw a jittered latency."""

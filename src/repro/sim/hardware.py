@@ -231,6 +231,7 @@ def codec_point(
     change_density: float = 0.2,
     client_tier: Tier = THIN_CLIENT_NO_GPU,
     edge_tier: Tier = EDGE_GPU,
+    entropy: bool = False,
 ):
     """Roofline-calibrated codec operating point for the paper frame.
 
@@ -240,15 +241,22 @@ def codec_point(
     max of the kernels' arithmetic and their streaming floor.  The
     defaults — 8-bit depth, keyframe every 8 frames, 20% tile change
     density — sit near the stock ``data.rgbd`` sequence's measured
-    density (``codec.rate.calibrate_density_map``)."""
+    density (``codec.rate.calibrate_density_map``).
+
+    ``entropy=True`` arms the v2 entropy stage (``codec.ref``'s
+    per-tile width coding of the delta residuals): delta payloads
+    shrink by a further ~0.55x — the measured ratio of the width coder
+    on the stock sequence's sparse residual planes — at ~2 extra CPU
+    ops per raw byte on each side (one max-reduce pass plus the
+    shift/accumulate packing)."""
     from repro.codec.model import CodecModel, tier_codec_rate
     from repro.roofline import analysis
 
     peak = edge_tier.accel_flops / SINGLE_STREAM_UTIL
     edge_bw = analysis.HBM_BW * (peak / analysis.PEAK_FLOPS)
     client_rate = tier_codec_rate(client_tier)
-    return CodecModel.from_roofline(
-        "delta_quant",
+    point = CodecModel.from_roofline(
+        "delta_quant_v2" if entropy else "delta_quant",
         quant_bits=quant_bits,
         keyframe_interval=keyframe_interval,
         change_density=change_density,
@@ -257,6 +265,14 @@ def codec_point(
         decode_flops=edge_tier.accel_flops,
         decode_mem_bandwidth=edge_bw,
     )
+    if entropy:
+        point = dataclasses.replace(
+            point,
+            entropy_coding=True,
+            entropy_ratio=0.55,
+            entropy_flops_per_byte=2.0,
+        )
+    return point
 
 
 def fleet_star(
@@ -307,6 +323,49 @@ def fleet_star(
             serialization_bandwidth=2e9,
             jni_bandwidth=8e9,
         ),
+    )
+
+
+def shared_cell_star(
+    num_edges: int = 2,
+    edge_capacity: int = 4,
+    client_tier: Tier = THIN_CLIENT_NO_GPU,
+    base_link: Link = links.FIVE_G_EDGE,
+    batching: bool = False,
+    comp: "StagedComputation" = None,
+    cell: str = "cell0",
+    cell_capacity: int = 1,
+) -> Topology:
+    """A :func:`fleet_star` whose spokes share one radio medium.
+
+    Topologically identical to ``fleet_star`` — same tiers, same
+    per-spoke links, same staggered latencies — except every spoke
+    declares ``medium=cell`` with ``cell_capacity`` concurrent
+    transmissions: all clients' wire legs contend for the same 5G cell
+    (or backhaul) instead of each owning a private pipe.
+    ``cell_capacity=0`` is the unlimited off-switch — the fleet engines
+    are then bit-for-bit the private-spoke ``fleet_star`` run (golden-
+    tested in tests/test_contention.py)."""
+    topo = fleet_star(
+        num_edges=num_edges,
+        edge_capacity=edge_capacity,
+        client_tier=client_tier,
+        base_link=base_link,
+        batching=batching,
+        comp=comp,
+    )
+    shared_links = {
+        pair: dataclasses.replace(
+            link, medium=cell, medium_capacity=cell_capacity
+        )
+        for pair, link in topo.links.items()
+    }
+    return Topology(
+        tiers=dict(topo.tiers),
+        links=shared_links,
+        home=topo.home,
+        wrapper=topo.wrapper,
+        wrapped=topo.wrapped,
     )
 
 

@@ -517,3 +517,185 @@ def test_codec_fleet_is_seed_deterministic():
     b = run_fleet(topo, comp, 6, num_frames=60, seed=5, codec=cfg)
     assert a.clients == b.clients
     assert a.edges == b.edges
+
+
+# ---------------------------------------------------------------------------
+# entropy stage: width coding of the XOR residuals (codec v2)
+# ---------------------------------------------------------------------------
+
+
+def test_entropy_roundtrip_bit_exact_on_real_residuals():
+    """threshold=0 delta residuals roundtrip through the width coder
+    bit for bit — the stage is lossless by construction."""
+    frame, ref_f = _frames()
+    delta, _ = cr.delta_encode(frame, ref_f, threshold=0.0)
+    words = np.asarray(delta, dtype=np.int32)
+    data = cr.entropy_encode_words(words)
+    back = cr.entropy_decode_words(data, words.size)
+    assert np.array_equal(back, words.ravel())
+    # sparse residuals compress hard: most tiles are all-zero (width 0)
+    assert len(data) < words.size * 4 / 4
+
+
+def test_entropy_encoded_never_exceeds_raw_plus_flag():
+    """The raw fallback bounds EVERY input — including adversarial
+    dense random words where width coding cannot win — at raw + 1."""
+    rng = np.random.default_rng(11)
+    cases = [
+        np.zeros(256, np.int32),
+        np.full(513, -1, np.int32),  # all bits set, odd length
+        rng.integers(-(2**31), 2**31, 1000).astype(np.int32),  # dense
+        rng.integers(0, 4, 333).astype(np.int32),  # narrow widths
+        np.array([], np.int32),
+        np.array([7], np.int32),
+    ]
+    for words in cases:
+        data = cr.entropy_encode_words(words)
+        assert len(data) <= words.size * 4 + 1, words.size
+        back = cr.entropy_decode_words(data, words.size)
+        assert np.array_equal(back, words.ravel())
+        assert cr.entropy_encoded_nbytes(words) == len(data)
+
+
+def test_entropy_decode_rejects_garbage():
+    with pytest.raises(ValueError):
+        cr.entropy_decode_words(b"", 4)
+    with pytest.raises(ValueError):
+        cr.entropy_decode_words(bytes([9, 0, 0]), 2)  # unknown flag
+    with pytest.raises(ValueError):
+        cr.entropy_encode_words(np.zeros(8, np.int32), tile=0)
+
+
+def test_significant_bit_widths_kernel_matches_oracle():
+    """The Pallas per-tile width kernel == Python int.bit_length on the
+    tile max, on real residuals and on adversarial extremes (sign bit
+    set -> width 32; all zero -> width 0)."""
+    frame, ref_f = _frames(seed=5)
+    delta, _ = cr.delta_encode(frame, ref_f, threshold=0.0)
+    words = np.asarray(delta, np.int32)
+    bh, bw = 8, 32
+    got = np.asarray(ck.significant_bit_widths(delta, block_h=bh, block_w=bw))
+    h, w = words.shape
+    for i in range(got.shape[0]):
+        for j in range(got.shape[1]):
+            tile = words[i * bh : (i + 1) * bh, j * bw : (j + 1) * bw]
+            expect = int(tile.view(np.uint32).max()).bit_length()
+            assert got[i, j] == expect, (i, j)
+    extremes = jnp.asarray(
+        np.array([[0, 0], [-1, 0]], np.int32).repeat(8, 0).repeat(32, 1)
+    )
+    ext = np.asarray(ck.significant_bit_widths(extremes, block_h=8, block_w=32))
+    assert ext[0, 0] == 0 and ext[0, 1] == 0
+    assert ext[1, 0] == 32  # sign bit set reads as uint32 max width
+
+
+def test_significant_bit_widths_batched_b1_bit_for_bit():
+    frame, ref_f = _frames(seed=9)
+    delta, _ = cr.delta_encode(frame, ref_f, threshold=0.0)
+    single = ck.significant_bit_widths(delta)
+    grid = ck.significant_bit_widths_batched(delta[None])
+    vmap = ck.significant_bit_widths_batched(delta[None], path="vmap")
+    assert np.array_equal(np.asarray(grid[0]), np.asarray(single))
+    assert np.array_equal(np.asarray(vmap[0]), np.asarray(single))
+    with pytest.raises(ValueError):
+        ck.significant_bit_widths_batched(delta[None], path="nope")
+
+
+def test_entropy_model_pricing_identities():
+    """CodecModel with the entropy stage OFF is byte- and time-identical
+    to the historical model (the off-switch); ON shrinks only the delta
+    ratio and adds the stage's per-byte compute on both sides."""
+    base = hardware.codec_point()
+    v2 = hardware.codec_point(entropy=True)
+    off = dataclasses.replace(
+        v2, entropy_coding=False, entropy_ratio=1.0,
+        entropy_flops_per_byte=0.0, name=base.name,
+    )
+    tier = hardware.THIN_CLIENT_NO_GPU
+    n = 537_600
+    assert off == base
+    assert v2.entropy_coding and v2.entropy_ratio < 1.0
+    assert v2.keyframe_ratio == base.keyframe_ratio  # keyframes dense
+    assert v2.delta_ratio == base.delta_ratio * v2.entropy_ratio
+    assert v2.wire_nbytes(n) < base.wire_nbytes(n)
+    assert v2.encode_time(n, tier) > base.encode_time(n, tier)
+    assert v2.decode_time(n, tier) > base.decode_time(n, tier)
+    with pytest.raises(ValueError):
+        dataclasses.replace(base, entropy_ratio=0.0)
+    with pytest.raises(ValueError):
+        dataclasses.replace(base, entropy_flops_per_byte=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# keyframe loss + resync (fault injection)
+# ---------------------------------------------------------------------------
+
+
+def _sequence(n=20, h=32, w=128, seed=2):
+    rng = np.random.default_rng(seed)
+    base = rng.normal(0.5, 0.1, (h, w)).astype(np.float32)
+    frames = []
+    for t in range(n):
+        f = base.copy()
+        f[(t * 3) % h : (t * 3) % h + 4, :16] += 0.05
+        frames.append(jnp.asarray(f))
+    return frames
+
+
+def test_stream_resync_bounds_stale_decodes():
+    """Fault injection: drop one delta packet mid-stream.  The decoder
+    must NACK every packet whose reference chain is broken (never
+    decode against a stale reference) and the encoder must deliver a
+    fresh keyframe within resync_bound packets of the loss report."""
+    frames = _sequence()
+    enc = cr.DeltaStreamEncoder(keyframe_interval=16, resync_bound=3)
+    dec = cr.DeltaStreamDecoder()
+    lost_seq = 4
+    stale = 0
+    for i, f in enumerate(frames):
+        pkt = enc.encode(f)
+        if pkt.seq == lost_seq:
+            enc.report_loss(lost_seq)  # transport NACK, packet dropped
+            continue
+        out = dec.decode(pkt)
+        if out is None:
+            stale += 1
+            assert pkt.kind == "delta"  # keyframes always decode
+            assert stale <= enc.resync_bound  # bounded outage
+        else:
+            # everything that DOES decode is bit-exact
+            assert np.array_equal(
+                np.asarray(out, np.float32).view(np.int32),
+                np.asarray(f, np.float32).view(np.int32),
+            )
+    assert stale > 0  # the fault was injected on a delta
+    assert enc.forced_keyframes >= 1
+    assert dec.nacks == stale
+    # after resync the tail decoded clean: the LAST frame came through
+    assert dec.decoded >= len(frames) - 1 - enc.resync_bound - 1
+
+
+def test_stream_without_loss_never_forces_keyframes():
+    frames = _sequence(n=12)
+    enc = cr.DeltaStreamEncoder(keyframe_interval=4, resync_bound=2)
+    dec = cr.DeltaStreamDecoder()
+    kinds = []
+    for f in frames:
+        pkt = enc.encode(f)
+        kinds.append(pkt.kind)
+        out = dec.decode(pkt)
+        assert out is not None
+        assert np.array_equal(
+            np.asarray(out, np.float32).view(np.int32),
+            np.asarray(f, np.float32).view(np.int32),
+        )
+    assert enc.forced_keyframes == 0 and dec.nacks == 0
+    # the schedule is exactly the keyframe interval
+    assert kinds == (["key"] + ["delta"] * 3) * 3
+
+
+def test_stream_encoder_validates_config():
+    with pytest.raises(ValueError):
+        cr.DeltaStreamEncoder(keyframe_interval=0)
+    with pytest.raises(ValueError):
+        cr.DeltaStreamEncoder(resync_bound=0)

@@ -62,6 +62,10 @@ def _assert_equivalent(ro, rv):
             "mean_wait", "batches", "mean_batch_size", "peak_load",
         ):
             assert getattr(lo, f) == getattr(lv, f), (lo.name, f)
+    # shared-medium occupancy counters: LinkLoad dataclass equality
+    # (admitted/contended counts, busy_time and total_wait floats all
+    # exact) — empty on private-spoke topologies, on BOTH engines
+    assert ro.links == rv.links
     for f in ("hits", "misses", "invalidations"):
         assert getattr(ro.cache.stats, f) == getattr(rv.cache.stats, f), f
     assert (ro.migration is None) == (rv.migration is None)
@@ -87,6 +91,19 @@ _DRIFTS = (
 
 
 def _golden_configs():
+    import dataclasses
+
+    from repro.net import links
+
+    # a narrow shared cell: every spoke contends for one transmission
+    # slot, so the contended/keyframe-loss arms exercise real queueing
+    # (and real drops) rather than an idle medium
+    _cell_topo = hardware.shared_cell_star(
+        num_edges=3,
+        edge_capacity=2,
+        base_link=dataclasses.replace(links.FIVE_G_EDGE, bandwidth=15e6),
+        cell_capacity=1,
+    )
     topo = hardware.fleet_star(num_edges=3, edge_capacity=2)
     btopo = hardware.fleet_star(num_edges=3, edge_capacity=2, batching=True)
     het_topo, het_classes = hardware.hetero_fleet_star(
@@ -115,6 +132,30 @@ def _golden_configs():
         "drift": dict(
             topo=topo, comp=_COMP, num_clients=8, num_frames=60,
             drifts=list(_DRIFTS), drift_window=12, drift_min_samples=5,
+        ),
+        "entropy_codec": dict(
+            topo=topo, comp=_COMP, num_clients=6, num_frames=40,
+            codec=crate.CodecConfig(
+                base=hardware.codec_point(entropy=True)
+            ),
+        ),
+        "contended": dict(
+            topo=_cell_topo, comp=_COMP, num_clients=8, num_frames=40,
+            dispatch="latency_weighted",
+            codec=crate.CodecConfig(
+                base=hardware.codec_point(entropy=True),
+                bits_ladder=(16, 8, 4, 2),
+                cell_threshold=0.1e-3, cell_stagger=0.05,
+            ),
+        ),
+        "keyframe_loss": dict(
+            topo=_cell_topo, comp=_COMP, num_clients=10, num_frames=50,
+            dispatch="latency_weighted",
+            codec=crate.CodecConfig(
+                base=hardware.codec_point(entropy=True),
+                cell_threshold=0.1e-3, resync_bound=4,
+                drop_threshold=0.2,
+            ),
         ),
         "hetero": dict(
             topo=het_topo, comp=_COMP, num_clients=9, num_frames=40,
