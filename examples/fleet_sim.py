@@ -14,7 +14,11 @@ stop being private: every client's wire legs contend for one shared
 5G cell (``hardware.shared_cell_star``), and the same codec is run
 blind vs with the cell-fairness loop — the fair fleet backs off down
 the bits ladder (heaviest payload first) and buys back the queueing
-the blind fleet drowns in.  A final pass reruns
+the blind fleet drowns in.  The fleet then stops being single-model:
+clients cycle across the multi-model workload registry (solo landmark
+chain, branching multi-hand tree, gesture head, RGBD DAG) and the
+DAG-aware planner — pricing conditional branches at expected cost —
+is raced against forced linearization.  A final pass reruns
 the codec fleet with telemetry armed: per-frame span traces exported as
 Chrome trace-event JSON (load ``fleet_trace.json`` in Perfetto or
 ``chrome://tracing``) and the latency-attribution table showing where
@@ -171,6 +175,30 @@ def main() -> None:
             f"uplink={r.mean_uplink_bytes / 1e3:6.1f} kB/frame "
             f"cell wait={lk.mean_wait * 1e3:5.2f}ms/txn "
             f"served spread={max(served) / min(served):.2f}x"
+        )
+
+    print("\n== mixed multi-model traffic: DAG-aware vs linearized ==")
+    # client c runs mix[c % 4]: chain / out-tree / gesture head / RGBD
+    # DAG.  The linearized arm forces every conditional branch (second
+    # hand, re-detect, re-seed) to run on every frame — what a
+    # DAG-blind planner must assume; expected-cost pricing stops
+    # paying for branches that rarely fire.
+    mix = hardware.mixed_workloads()
+    wired = hardware.fleet_star(
+        num_edges=2, edge_capacity=2, base_link=links.GIGABIT_ETHERNET
+    )
+    for mode, suite in (
+        ("linearized", tuple(w.linearized() for w in mix)),
+        ("dag-aware", mix),
+    ):
+        r = run_fleet(
+            wired, comp, num_clients=12, num_frames=150,
+            policy=Policy.AUTO, dispatch="least_queue",
+            granularity="multi_step", workloads=suite, engine="vector",
+        )
+        print(
+            f"{mode:10s} fps={r.mean_achieved_fps:5.1f} "
+            f"drop={r.drop_rate:.3f} p99={r.p99_loop_time * 1e3:6.1f}ms"
         )
 
     print("\n== telemetry: span traces + latency attribution ==")

@@ -525,6 +525,12 @@ class LinkTable:
         (subtract the charged latency, add the draw, leg by leg), so
         with undrifted links the result — and the rng consumption — is
         bit-identical to the analytic simulator's.
+
+        A probabilistic leg (``LatencyLeg.weight`` < 1, from a
+        conditional branch) contributes ``weight * draw`` to the total
+        while the *observed* draw stays unscaled — drift detection and
+        rate control compare draws against live link parameters, which
+        know nothing of branch probabilities.
         """
         t = plan.total_time
         observed: List[Tuple[str, float]] = []
@@ -534,8 +540,12 @@ class LinkTable:
                 lat, jit = leg.latency, leg.jitter
             else:
                 lat, jit = link.latency, link.jitter
-            t -= leg.latency
             draw = sample_latency(lat, jit, rng)
-            t += draw
+            if leg.weight == 1.0:
+                t -= leg.latency
+                t += draw
+            else:
+                t -= leg.weight * leg.latency
+                t += leg.weight * draw
             observed.append((leg.link, draw))
         return t, tuple(observed)

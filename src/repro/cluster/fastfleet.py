@@ -248,6 +248,7 @@ def run_fleet_vectorized(
     codec: Optional[CodecConfig],
     client_classes: Optional[Tuple[object, ...]],
     telemetry=None,
+    workloads: Optional[Tuple[StagedComputation, ...]] = None,
 ) -> "FleetResult":
     """The vectorized twin of ``fleet.run_fleet``'s event loop.
 
@@ -284,7 +285,6 @@ def run_fleet_vectorized(
     q = _ShimQueue()
     heap = q.heap
     home = topo.home
-    key_name = comp_used.name
     period = 1.0 / camera_fps
     last_frame = num_frames - 1
     min_samples = max(1, drift_min_samples)
@@ -333,6 +333,11 @@ def run_fleet_vectorized(
     # --- struct-of-arrays client state -----------------------------------
     edge_i = [0] * N  # index into `edges`
     tier_of: List[object] = [None] * N  # own hardware class (hetero)
+    # own workload (mixed fleets: workloads[c % nw]; else comp_used) and
+    # its batch key — fused launches only join under the same workload
+    nw = len(workloads) if workloads else 0
+    comp_of: List[StagedComputation] = [comp_used] * N
+    key_of: List[str] = [comp_used.name] * N
     rngs: List[object] = [None] * N
     rates: Optional[List[object]] = [None] * N if codec is not None else None
     t_free = [0.0] * N
@@ -366,7 +371,7 @@ def run_fleet_vectorized(
     nvis = [0] * N
     has_legs = [False] * N
     service_total = [0.0] * N
-    legs_meta: List[list] = [[]] * N  # [(link, leg_lat, leg_jit), ...]
+    legs_meta: List[list] = [[]] * N  # [(link, leg_lat, leg_jit, weight), ...]
     leg_links: List[tuple] = [()] * N
     # detector link groups: [(link, predicted, leg_columns, tolerance), ...]
     link_groups: List[list] = [[]] * N
@@ -403,14 +408,17 @@ def run_fleet_vectorized(
         visits[c] = vis
         nvis[c] = len(vis)
         service_total[c] = sum(v[2] for v in vis)
-        legs = [(leg.link, leg.latency, leg.jitter) for leg in plan.legs]
+        legs = [
+            (leg.link, leg.latency, leg.jitter, leg.weight)
+            for leg in plan.legs
+        ]
         legs_meta[c] = legs
         has_legs[c] = bool(legs)
-        leg_links[c] = tuple(ln for ln, _, _ in legs)
+        leg_links[c] = tuple(ln for ln, _, _, _ in legs)
         up_media[c], down_media[c] = plan_media(plan, media_of)
         pred_map: Dict[str, float] = {}
         cols_map: Dict[str, list] = {}
-        for j, (ln, lat, _) in enumerate(legs):
+        for j, (ln, lat, _, _) in enumerate(legs):
             pred_map.setdefault(ln, lat)
             cols_map.setdefault(ln, []).append(j)
         link_groups[c] = [
@@ -500,13 +508,13 @@ def run_fleet_vectorized(
         legs = legs_meta[c]
         resolved = []
         nj = 0
-        for ln, leg_lat, leg_jit in legs:
+        for ln, leg_lat, leg_jit, w in legs:
             link = link_table.lookup(ln)
             if link is None:
                 lat, jit = leg_lat, leg_jit
             else:
                 lat, jit = link.latency, link.jitter
-            resolved.append((lat, jit, leg_lat))
+            resolved.append((lat, jit, leg_lat, w))
             if jit > 0.0:
                 nj += 1
         total = plan_obj[c].total_time
@@ -526,16 +534,24 @@ def run_fleet_vectorized(
         T = np.full(B, total)
         cols = []
         zc = 0
-        for lat, jit, leg_lat in resolved:
+        for lat, jit, leg_lat, w in resolved:
             # exact float-op order of LinkTable.sample_plan_latency:
-            # subtract the charged latency, add the draw, leg by leg
-            T = T - leg_lat
+            # subtract the charged latency, add the draw, leg by leg.
+            # A probability-weighted leg (conditional-branch pricing,
+            # weight < 1.0) swaps w-scaled terms into the SAME slots;
+            # the detector/telemetry columns stay the unscaled draws,
+            # exactly like the object engine's `observed`.
             if jit > 0.0:
                 col = np.maximum(0.0, lat + jit * Z[:, zc])
                 zc += 1
             else:
                 col = np.full(B, lat)
-            T = T + col
+            if w == 1.0:
+                T = T - leg_lat
+                T = T + col
+            else:
+                T = T - w * leg_lat
+                T = T + w * col
             cols.append(col)
         blk_t[c] = T.tolist()
         if cols:
@@ -650,7 +666,7 @@ def run_fleet_vectorized(
             topo, edges[ei], link_table, client_tier=tier_of[c]
         )
         plan, _ = cache.get_or_plan(
-            comp_used,
+            comp_of[c],
             sub,
             policy,
             planner,
@@ -708,16 +724,20 @@ def run_fleet_vectorized(
         media=media,
     )
     disp = make_dispatch(dispatch)
-    # id-indexed admission memo: every client of one (edge, class) pair
-    # shares one plan/fingerprint; the object engine re-derives them per
-    # client and counts a cache hit each time, so the memo bumps the
-    # same counter to keep CacheStats identical
+    # id-indexed admission memo: every client of one (edge, class,
+    # workload) triple shares one plan/fingerprint; the object engine
+    # re-derives them per client and counts a cache hit each time, so
+    # the memo bumps the same counter to keep CacheStats identical
     admit_memo: Dict[Tuple, Tuple] = {}
     n_classes = len(client_classes) if client_classes else 0
     for c in range(N):
         tier_c = client_classes[c % n_classes] if n_classes else None
         tier_of[c] = tier_c
+        comp_c = workloads[c % nw] if nw else comp_used
+        comp_of[c] = comp_c
+        key_of[c] = comp_c.name
         ctx.client_tier = tier_c
+        ctx.comp = comp_c
         e = disp.assign(c, ctx)
         ctx.assignments[e] = ctx.assignments.get(e, 0) + 1
         rate = (
@@ -725,12 +745,12 @@ def run_fleet_vectorized(
         )
         if rates is not None:
             rates[c] = rate
-        memo_key = (e, tier_c)
+        memo_key = (e, tier_c, c % nw if nw else 0)
         hit = admit_memo.get(memo_key)
         if hit is None:
             sub = edge_subtopology(topo, e, link_table, client_tier=tier_c)
             plan, _ = cache.get_or_plan(
-                comp_used,
+                comp_c,
                 sub,
                 policy,
                 planner,
@@ -887,7 +907,7 @@ def run_fleet_vectorized(
                         now,
                         vis[2],
                         _make_done(c, vidx[c], wait_acc[c], now, vis[2]),
-                        key=key_name,
+                        key=key_of[c],
                     )
                     seq = q.seq
             elif kind == _K_FINISH:
@@ -984,6 +1004,7 @@ def run_fleet_vectorized(
                                 rates[c].model if rates is not None else None
                             ),
                             client_tier=tier_of[c],
+                            comp=comp_of[c],
                         )
                         if move is not None:
                             target, mig_latency = move

@@ -277,12 +277,14 @@ class _Client:
         rate: Optional[RateController] = None,
         tier=None,
         media_of=None,
+        comp: Optional[StagedComputation] = None,
     ):
         self.idx = idx
         self.rng = rng
         self.edge = edge
         self.home = home
         self.tier = tier  # own hardware class (hetero fleets; None = default)
+        self.comp = comp  # own workload (mixed fleets; set by run_fleet)
         self.media_of = media_of  # link name -> SharedLink (shared media)
         self.med_wait = 0.0  # shared-medium delay of the in-flight frame
         self.set_plan(plan, plan_fp)
@@ -341,6 +343,7 @@ def run_fleet(
     client_classes: Optional[Sequence[object]] = None,
     adaptive_window: Optional[AdaptiveWindow] = None,
     telemetry=None,
+    workloads: Optional[Sequence[StagedComputation]] = None,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -409,6 +412,16 @@ def run_fleet(
     edges stop paying the window as pure latency.  ``None`` (default)
     keeps the fixed window exactly.
 
+    Mixed traffic: ``workloads`` is a sequence of
+    :class:`~repro.core.stages.StagedComputation` records (e.g. the
+    registry in :mod:`repro.core.workloads`); client ``c`` runs
+    ``workloads[c % len(workloads)]`` instead of ``comp`` — it plans,
+    dispatches, migrates, batches (fused launches only join under the
+    same workload key) and re-plans against its own pipeline, on both
+    engines event-for-event identically.  ``workloads=None`` (default)
+    keeps the homogeneous fleet bit-for-bit, and ``workloads=(comp,)``
+    is the golden off-switch — event-for-event the ``comp`` fleet.
+
     Telemetry: passing a :class:`~repro.cluster.telemetry.Telemetry`
     records per-frame span traces (exact loop-time decomposition,
     Chrome-trace exportable), a metrics registry (cache, migration,
@@ -420,11 +433,17 @@ def run_fleet(
     if num_clients < 1:
         raise ValueError("need at least one client")
     if granularity == "single_step":
-        comp_used = comp.fused()
+        _prep = lambda cmp: cmp.fused()  # noqa: E731
     elif granularity == "multi_step":
-        comp_used = comp
+        _prep = lambda cmp: cmp  # noqa: E731
     else:
         raise ValueError(granularity)
+    comp_used = _prep(comp)
+    if workloads is not None and not workloads:
+        raise ValueError("workloads must be non-empty when provided")
+    workloads_used = (
+        tuple(_prep(w) for w in workloads) if workloads is not None else None
+    )
 
     edges = [n for n in topo.tier_names() if n != topo.home]
     if not edges:
@@ -486,6 +505,7 @@ def run_fleet(
             codec=codec,
             client_classes=classes,
             telemetry=telemetry,
+            workloads=workloads_used,
         )
 
     cache = cache if cache is not None else PlanCache()
@@ -545,10 +565,13 @@ def run_fleet(
         media=media,
     )
     disp = make_dispatch(dispatch)
+    nw = len(workloads_used) if workloads_used else 0
     clients: List[_Client] = []
     for c in range(num_clients):
         tier_c = classes[c % len(classes)] if classes else None
+        comp_c = workloads_used[c % nw] if workloads_used else comp_used
         ctx.client_tier = tier_c
+        ctx.comp = comp_c
         edge = disp.assign(c, ctx)
         ctx.assignments[edge] = ctx.assignments.get(edge, 0) + 1
         sub = edge_subtopology(topo, edge, link_table, client_tier=tier_c)
@@ -556,7 +579,7 @@ def run_fleet(
             RateController(codec, client_id=c) if codec is not None else None
         )
         plan, _ = cache.get_or_plan(
-            comp_used,
+            comp_c,
             sub,
             policy,
             planner,
@@ -573,6 +596,7 @@ def run_fleet(
                 rate=rate,
                 tier=tier_c,
                 media_of=media_of,
+                comp=comp_c,
             )
         )
     if tel is not None:
@@ -610,7 +634,7 @@ def run_fleet(
         and migration paths so they cannot diverge)."""
         sub = edge_subtopology(topo, edge, link_table, client_tier=client.tier)
         plan, _ = cache.get_or_plan(
-            comp_used, sub, policy, planner, codec=client.codec_model
+            client.comp, sub, policy, planner, codec=client.codec_model
         )
         client.set_plan(plan, topology_fingerprint(sub))
         client.drifted = False
@@ -710,7 +734,7 @@ def run_fleet(
         # unbatched servers invoke `placed` synchronously (identical to
         # the historical admit-then-schedule path); batching servers
         # defer it to their gather-window close event
-        servers[tier].submit(arrived, service, placed, key=comp_used.name)
+        servers[tier].submit(arrived, service, placed, key=client.comp.name)
 
     def finish(client: _Client, wait: float) -> None:
         i, arrival, start, sampled, observed = client.pending
@@ -800,6 +824,7 @@ def run_fleet(
                 force=client.drifted,
                 codec=client.codec_model,
                 client_tier=client.tier,
+                comp=client.comp,
             )
             if move is not None:
                 target, mig_latency = move

@@ -337,6 +337,7 @@ class MigrationController:
         current: Optional[str] = None,
         codec=None,
         client_tier=None,
+        comp: Optional[StagedComputation] = None,
     ) -> float:
         """What one frame would cost a client placed on ``edge`` now.
 
@@ -361,20 +362,25 @@ class MigrationController:
         calibration that catches *service-side* drift (a throttled edge
         serves the same queue slower; plan totals and queue depth alone
         mispredict it, tested in tests/test_migration.py)."""
+        if comp is None:
+            comp = self.comp
         link = self.link_table.get(
             self.topo.link_between(self.topo.home, edge).name
         )
         # client_tier joins the memo key: a heterogeneous fleet scores
         # each hardware class against its own plans (frozen Tier values
-        # hash directly, like the frozen Link / CodecModel entries)
-        memo_key = (edge, link, codec, client_tier)
+        # hash directly, like the frozen Link / CodecModel entries).
+        # comp name too: a mixed fleet scores each workload against its
+        # own plans (names are unique within a registry, and the cached
+        # plan itself is still keyed on the full comp signature).
+        memo_key = (edge, link, codec, client_tier, comp.name)
         cached = self._scores.get(memo_key)
         if cached is None:
             sub = edge_subtopology(
                 self.topo, edge, self.link_table, client_tier=client_tier
             )
             plan, _ = self.cache.get_or_plan(
-                self.comp,
+                comp,
                 sub,
                 self.policy,
                 self.planner,
@@ -405,7 +411,7 @@ class MigrationController:
                 # inflation factor is linear, so stage-wise and summed
                 # inflation agree exactly)
                 excess = model.batch_time([service] * (occ + 1)) - service
-                if srv.open_batch_size(self.key) > 0:
+                if srv.open_batch_size(comp.name) > 0:
                     # a compatible batch is gathering RIGHT NOW: joining
                     # it skips ~half the gather-window dwell a fresh
                     # batch would pay — a small strict credit that
@@ -474,6 +480,7 @@ class MigrationController:
         force: bool = False,
         codec=None,
         client_tier=None,
+        comp: Optional[StagedComputation] = None,
     ) -> Optional[Tuple[str, float]]:
         """Should ``client`` move off ``current``?  Returns ``(target,
         state_transfer_latency)`` and records the migration, or None.
@@ -485,10 +492,16 @@ class MigrationController:
         plans and the state transfer are priced under it (None falls
         back to the controller's fleet-level default).  ``client_tier``
         is the asking client's own hardware class in a heterogeneous
-        fleet: candidate plans are priced against it.
+        fleet: candidate plans are priced against it.  ``comp`` is the
+        asking client's own workload in a mixed fleet: candidate plans,
+        batch-affinity credits and the live dispatch policies all see
+        the client's actual pipeline (None falls back to the
+        controller's fleet-level default).
         """
         if codec is None:
             codec = self.codec
+        if comp is None:
+            comp = self.comp
         if not force and self._dwell.get(client, 0) < self.config.min_dwell_frames:
             self.stats.rejected_dwell += 1
             return None
@@ -501,6 +514,7 @@ class MigrationController:
             self._ctx.now = now
             self._ctx.codec = codec
             self._ctx.client_tier = client_tier
+            self._ctx.comp = comp
             orig = self.assignments.get(current, 0)
             self.assignments[current] = max(0, orig - 1)
             try:
@@ -511,14 +525,16 @@ class MigrationController:
                 self.stats.rejected_threshold += 1
                 return None
             cur_t = self.predicted_frame_time(
-                current, now, current, codec, client_tier
+                current, now, current, codec, client_tier, comp
             )
             new_t = self.predicted_frame_time(
-                target, now, current, codec, client_tier
+                target, now, current, codec, client_tier, comp
             )
         else:
             times = {
-                e: self.predicted_frame_time(e, now, current, codec, client_tier)
+                e: self.predicted_frame_time(
+                    e, now, current, codec, client_tier, comp
+                )
                 for e in self.edges
             }
             target = min(self.edges, key=lambda e: (times[e], e))

@@ -46,6 +46,9 @@ def comp_signature(comp: StagedComputation) -> Tuple:
                 s.parallel_fraction,
                 s.inputs,
                 tuple((o.name, o.nbytes, o.origin) for o in s.outputs),
+                # appended LAST so positional consumers of older
+                # signature tuples stay valid (see invalidate_link)
+                s.exec_prob,
             )
             for s in comp.stages
         ),

@@ -401,6 +401,10 @@ class Telemetry:
             dd = 0.0
             for j, draw in enumerate(draws):
                 delta = draw - legs[j].latency
+                if legs[j].weight != 1.0:
+                    # probabilistic leg: the loop total only felt the
+                    # expectation-weighted share of this draw
+                    delta = legs[j].weight * delta
                 if down_flags[j]:
                     dd += delta
                 else:

@@ -47,6 +47,17 @@ Cost semantics (unchanged from the calibrated two-tier model):
              millisecond stages).  The identity codec never applies, so
              ``codec=None`` and the identity codec are bit-for-bit the
              same arithmetic.
+  branches : a conditional stage (``Stage.exec_prob`` < 1) charges the
+             *expected* value of every term it owns — compute, RPC
+             envelope, input/output transfers, wire bytes — each
+             multiplied by its exec_prob (and result ship-home by the
+             producer's).  Latency legs record the probability as
+             ``LatencyLeg.weight`` while keeping the link's unscaled
+             latency/jitter, so jitter resampling and drift detection
+             observe the real link and only total-time arithmetic is
+             expectation-weighted.  ``exec_prob = 1`` everywhere is
+             bit-for-bit the historical arithmetic (scaling by 1.0 is
+             IEEE-exact).
 """
 
 from __future__ import annotations
@@ -201,11 +212,20 @@ class BatchServiceModel:
 
 @dataclasses.dataclass(frozen=True)
 class LatencyLeg:
-    """One charged latency leg — the unit of exact jitter resampling."""
+    """One charged latency leg — the unit of exact jitter resampling.
+
+    ``latency`` / ``jitter`` are the link's UNSCALED parameters — live
+    lookups (drift detection, rate control) compare draws against them
+    directly.  ``weight`` is the expected-cost multiplier of the leg
+    (the ``exec_prob`` of the conditional stage that charged it; 1.0 for
+    unconditional legs): total-time arithmetic applies ``weight`` to
+    both the charged latency and any resampled draw, never to the
+    stored parameters."""
 
     link: str
     latency: float
     jitter: float
+    weight: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -250,8 +270,17 @@ class PlanReport:
             return self.total_time
         base = self.total_time
         for leg in self.legs:
-            base -= leg.latency
-            base += sample_latency(leg.latency, leg.jitter, rng)
+            if leg.weight == 1.0:
+                base -= leg.latency
+                base += sample_latency(leg.latency, leg.jitter, rng)
+            else:
+                # probabilistic leg: the draw stays unscaled (it is a
+                # property of the link), the expectation weight applies
+                # in the total only
+                base -= leg.weight * leg.latency
+                base += leg.weight * sample_latency(
+                    leg.latency, leg.jitter, rng
+                )
         return base
 
 
@@ -488,10 +517,21 @@ class CostEngine:
         def _bd(key: str, v: float) -> None:
             bd[key] = bd.get(key, 0.0) + v
 
-        def _ship(nbytes: int, src: str, dst: str, piggyback: Optional[bool]) -> None:
+        def _ship(
+            nbytes: int,
+            src: str,
+            dst: str,
+            piggyback: Optional[bool],
+            scale: float = 1.0,
+        ) -> None:
             """Payload cost: codec encode/decode (when armed) + fetch
             legs + serialize/deserialize + wire, all on codec-aware
-            bytes."""
+            bytes.  ``scale`` is the expectation weight of the transfer
+            (the consuming/producing stage's ``exec_prob``); every term
+            — compute, latency, serialization, wire, byte counters — is
+            charged at ``scale`` times its unconditional value.
+            ``scale * x`` is IEEE-exact at 1.0, so unconditional
+            pipelines price bit-for-bit as before."""
             nonlocal compute_t, wrapper_t, network_t, up_bytes, down_bytes
             links = topo.path_links(src, dst)
             # hop direction relative to home (see the byte-accounting
@@ -504,25 +544,31 @@ class CostEngine:
             piggy = self._piggybacks(src, dst) if piggyback is None else piggyback
             wire_n, enc_t, dec_t = self._codec_terms(nbytes, src, dst)
             if enc_t > 0.0:  # encode where the payload lives...
+                enc_t = scale * enc_t
                 compute_t += enc_t
                 compute_by_tier[src] = compute_by_tier.get(src, 0.0) + enc_t
                 _bd("encode_home" if src == topo.home else "encode_remote", enc_t)
             if dec_t > 0.0:  # ...decode where it lands (slot work there)
+                dec_t = scale * dec_t
                 compute_t += dec_t
                 compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + dec_t
                 _bd("decode_home" if dst == topo.home else "decode_remote", dec_t)
             if not piggy:
                 for link, dwn in zip(links, downs):
-                    network_t += link.latency
-                    legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+                    network_t += scale * link.latency
+                    legs.append(
+                        LatencyLeg(
+                            link.name, link.latency, link.jitter, scale
+                        )
+                    )
                     leg_down.append(dwn)
-                    _bd("lat_down" if dwn else "lat_up", link.latency)
-            ser_t = serialization_time(wire_n, topo.wrapper)
+                    _bd("lat_down" if dwn else "lat_up", scale * link.latency)
+            ser_t = scale * serialization_time(wire_n, topo.wrapper)
             wrapper_t += ser_t
             _bd("wrapper", ser_t)
-            network_t += wire_time(wire_n, links)
+            network_t += scale * wire_time(wire_n, links)
             for link, dwn in zip(links, downs):
-                w = wire_n / link.bandwidth
+                w = scale * (wire_n / link.bandwidth)
                 _bd("wire_down" if dwn else "wire_up", w)
                 wire_links.append((link.name, dwn, w))
                 if self.link_backlog and link.medium:
@@ -530,18 +576,20 @@ class CostEngine:
                     # queues behind the backlog already committed to
                     # the medium (dispatch probes price with this; the
                     # cached per-client plans never carry it)
-                    network_t += self.link_backlog.get(link.medium, 0.0)
+                    network_t += scale * self.link_backlog.get(link.medium, 0.0)
             # byte accounting is per wire hop relative to home (a payload
             # crossing two legs is counted on each): a hop whose far end
             # lies on its near end's route home is downlink — this keeps
             # star leaf->leaf traffic (down to the hub, then up a spoke)
-            # honest, where any whole-transfer label would be wrong
+            # honest, where any whole-transfer label would be wrong.
+            # Probabilistic transfers count expected bytes; the integer
+            # fast path keeps unconditional counters exact ints.
             for dwn in downs:
                 if dwn:
-                    down_bytes += wire_n
+                    down_bytes += wire_n if scale == 1.0 else scale * wire_n
                 else:
-                    up_bytes += wire_n
-                    _bd("raw_bytes_up", float(nbytes))
+                    up_bytes += wire_n if scale == 1.0 else scale * wire_n
+                    _bd("raw_bytes_up", scale * float(nbytes))
 
         def _best_source(holders: Set[str], dst: str, nbytes: int) -> str:
             if len(holders) == 1:
@@ -551,46 +599,56 @@ class CostEngine:
                 key=lambda s: self.transfer_scalar(nbytes, s, dst),
             )
 
+        # item -> probability it materializes (sources exist always;
+        # stage outputs inherit the producer's exec_prob) — result
+        # ship-home transfers are weighted by the producer's probability
+        item_prob: Dict[str, float] = {i.name: 1.0 for i in comp.sources}
+
         for stage, dst in zip(comp.stages, placements):
+            p = stage.exec_prob
             if topo.wrapped:
                 if dst != topo.home:
                     # RPC envelope: proxy + skeleton call costs, request +
                     # response wire latency on every leg of the route.
-                    wrapper_t += 2 * topo.wrapper.call_overhead
-                    _bd("wrapper", 2 * topo.wrapper.call_overhead)
+                    wrapper_t += p * (2 * topo.wrapper.call_overhead)
+                    _bd("wrapper", p * (2 * topo.wrapper.call_overhead))
                     for link in topo.path_links(topo.home, dst):
-                        network_t += 2 * link.latency
-                        legs.append(LatencyLeg(link.name, link.latency, link.jitter))
-                        legs.append(LatencyLeg(link.name, link.latency, link.jitter))
+                        network_t += p * (2 * link.latency)
+                        legs.append(LatencyLeg(link.name, link.latency, link.jitter, p))
+                        legs.append(LatencyLeg(link.name, link.latency, link.jitter, p))
                         leg_down.append(False)  # request leg, away from home
                         leg_down.append(True)  # response leg, back home
-                        _bd("lat_up", link.latency)
-                        _bd("lat_down", link.latency)
+                        _bd("lat_up", p * link.latency)
+                        _bd("lat_down", p * link.latency)
                 else:
                     # Local wrapped invocation still crosses the JNI boundary.
-                    wrapper_t += topo.wrapper.call_overhead
-                    _bd("wrapper", topo.wrapper.call_overhead)
+                    wrapper_t += p * topo.wrapper.call_overhead
+                    _bd("wrapper", p * topo.wrapper.call_overhead)
             # --- move inputs to `dst` (piggybacked on the invocation) ---
             for name in stage.inputs:
                 holders = residency[name]
                 if dst not in holders:
                     item = table[name]
                     src = _best_source(holders, dst, item.nbytes)
-                    _ship(item.nbytes, src, dst, piggyback=None)
+                    _ship(item.nbytes, src, dst, piggyback=None, scale=p)
                     holders.add(dst)
                 elif topo.wrapped and dst == topo.home:
                     # Already-local input of a wrapped home call marshals
                     # across JNI once (fast path: pinned arrays).
-                    marshal_t = table[name].nbytes / topo.wrapper.jni_bandwidth
+                    marshal_t = p * (
+                        table[name].nbytes / topo.wrapper.jni_bandwidth
+                    )
                     wrapper_t += marshal_t
                     _bd("wrapper", marshal_t)
-            # --- compute ---
-            ct = self.compute_time(stage, dst)
+            # --- compute (expected: a p-probability branch does its work
+            # on p of the frames) ---
+            ct = p * self.compute_time(stage, dst)
             compute_t += ct
             compute_by_tier[dst] = compute_by_tier.get(dst, 0.0) + ct
             _bd("compute_home" if dst == topo.home else "compute_remote", ct)
             for o in stage.outputs:
                 residency[o.name] = {dst}
+                item_prob[o.name] = p
 
         # --- results must land back home. If the producing stage was
         # remote this is the RPC response payload (no extra envelope);
@@ -600,18 +658,33 @@ class CostEngine:
             if topo.home not in holders:
                 item = table[rname]
                 src = _best_source(holders, topo.home, item.nbytes)
-                _ship(item.nbytes, src, topo.home, piggyback=True)
+                _ship(
+                    item.nbytes,
+                    src,
+                    topo.home,
+                    piggyback=True,
+                    scale=item_prob.get(rname, 1.0),
+                )
                 holders.add(topo.home)
 
         total = compute_t + wrapper_t + network_t
+
+        def _count(x):
+            # unconditional pipelines keep exact int byte counters; an
+            # expected count that happens to be integral canonicalizes
+            # back to int so reports stay comparable across arms
+            if isinstance(x, int):
+                return x
+            return int(x) if float(x).is_integer() else x
+
         return PlanReport(
             placements=tuple(placements),
             total_time=total,
             compute_time=compute_t,
             wrapper_time=wrapper_t,
             network_time=network_t,
-            uplink_bytes=up_bytes,
-            downlink_bytes=down_bytes,
+            uplink_bytes=_count(up_bytes),
+            downlink_bytes=_count(down_bytes),
             legs=tuple(legs),
             compute_by_tier=tuple(compute_by_tier.items()),
             breakdown=tuple(bd.items()),

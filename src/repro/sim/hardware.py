@@ -54,6 +54,17 @@ def paper_staged() -> StagedComputation:
     return tracker.build_staged(PAPER_TRACKER_CFG, frame_nbytes=PAPER_FRAME_BYTES)
 
 
+def mixed_workloads(names=None) -> tuple:
+    """The multi-model traffic mix for ``run_fleet(workloads=...)``:
+    the validated registry pipelines from :mod:`repro.core.workloads`
+    (solo landmark chain, two-hand out-tree, gesture tree, RGBD DAG),
+    in registry order — the default cycle of ``fleet_bench --mixed``.
+    ``names`` selects a subset (registry order is client order mod N)."""
+    from repro.core.workloads import WORKLOADS, workload_suite
+
+    return workload_suite(tuple(names) if names is not None else tuple(WORKLOADS))
+
+
 def calibrate_tier(
     name: str,
     native_fps: float,

@@ -27,6 +27,7 @@ from repro.cluster.events import AdaptiveWindow
 from repro.cluster.fastfleet import ArrayLoopStats
 from repro.cluster.fleet import LinkDrift, ServiceDrift
 from repro.codec import rate as crate
+from repro.core.workloads import workload_suite
 from repro.sim import hardware
 from repro.sim.clock import FrameEvent
 
@@ -171,6 +172,23 @@ def _golden_configs():
                 time=0.4, link="5g_edge_0", latency=0.06, jitter=0.012
             )],
         ),
+        # mixed multi-model traffic: clients cycle the workload registry
+        # (chain / out-tree / gesture tree / RGBD DAG), multi_step so
+        # the branching structure reaches the planner — the probability-
+        # weighted legs and per-workload batch keys must agree exactly
+        "mixed": dict(
+            topo=topo, comp=_COMP, num_clients=9, num_frames=40,
+            granularity="multi_step", workloads=workload_suite(),
+        ),
+        "mixed_everything": dict(
+            topo=btopo, comp=_COMP, num_clients=10, num_frames=50,
+            dispatch="least_queue", granularity="multi_step",
+            workloads=workload_suite(), gather_window=2e-3,
+            migration=MigrationConfig(min_dwell_frames=10),
+            drifts=[LinkDrift(
+                time=0.4, link="5g_edge_0", latency=0.06, jitter=0.012
+            )],
+        ),
     }
 
 
@@ -204,6 +222,23 @@ def test_edge_load_parity_audit(name):
             assert load.mean_batch_size == load.admitted / load.batches
         else:
             assert load.mean_batch_size == 0.0
+
+
+def test_workloads_off_switch_is_bit_for_bit():
+    """``workloads=(comp,)`` must reproduce ``workloads=None`` exactly,
+    on BOTH engines: the mixed-traffic axis has a golden off position
+    like every other fleet feature."""
+    topo = hardware.fleet_star(num_edges=3, edge_capacity=2)
+    kw = dict(
+        topo=topo, comp=_COMP, num_clients=6, num_frames=40,
+        granularity="multi_step",
+    )
+    for eng in ("object", "vector"):
+        on = run_fleet(
+            engine=eng, cache=PlanCache(), workloads=(_COMP,), **kw
+        )
+        off = run_fleet(engine=eng, cache=PlanCache(), **kw)
+        _assert_equivalent(on, off)
 
 
 def test_vector_engine_is_seed_stable():

@@ -1,0 +1,509 @@
+"""Branching-DAG planner correctness (PR 9).
+
+Covers the planner sweep's contracts:
+
+* ``TreeDPPlanner`` matches ``ExhaustivePlanner`` bit-for-bit on every
+  randomized out-tree whose plan lattice fits in 512 candidates
+  (property-tested — the DP returns ``engine.evaluate`` of its argmin,
+  so agreement is exact equality of ``total_time``, not approx);
+* on linear chains the tree DP reproduces ``chain_dp`` (a chain is the
+  degenerate out-tree) and both match exhaustive;
+* the general-DAG fallback (multi-seed exact-cost coordinate descent)
+  finds the exhaustive optimum on the registry's true-DAG workload
+  over randomized topologies;
+* ``SingleCrossingPlanner`` prices the all-home degenerate window
+  exactly once (the historical duplicate-evaluation bug);
+* ``fused()`` edge cases: passthrough results are not re-emitted,
+  zero-flops pipelines fuse with ``parallel_fraction = 0.0``, fusing
+  an empty pipeline raises, conditional stages fuse at expected cost;
+* ``exec_prob`` validation and expected-cost pricing semantics;
+* the workload registry's planner-applicability matrix.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.costengine import CostEngine
+from repro.core.offload import Link, Tier, Topology, WrapperModel
+from repro.core.planners import (
+    PLANNERS,
+    ChainDPPlanner,
+    TreeDPPlanner,
+    auto_planner,
+)
+from repro.core.stages import CLIENT, DataItem, Stage, StagedComputation
+from repro.core.workloads import (
+    WORKLOADS,
+    full_gesture,
+    multi_hand,
+    rgbd_tracking,
+    solo_landmark,
+    workload_suite,
+)
+
+# ---------------------------------------------------------------------------
+# randomized builders
+# ---------------------------------------------------------------------------
+
+
+def _rand_tier(name, rnd):
+    return Tier(
+        name,
+        accel_flops=rnd.uniform(0.05e12, 5e12),
+        scalar_flops=rnd.uniform(10e9, 80e9),
+        dispatch_overhead=rnd.uniform(10e-6, 200e-6),
+    )
+
+
+def _rand_link(name, rnd):
+    return Link(
+        name,
+        bandwidth=rnd.uniform(5e6, 1e9),
+        latency=rnd.uniform(1e-4, 40e-3),
+    )
+
+
+def _rand_topology(k, rnd, shape="chain"):
+    tiers = [(f"t{i}", _rand_tier(f"t{i}", rnd)) for i in range(k)]
+    if shape == "chain" or k == 2:
+        return Topology.chain(
+            tiers,
+            [_rand_link(f"l{i}", rnd) for i in range(k - 1)],
+            wrapper=WrapperModel(),
+        )
+    return Topology.star(
+        tiers[0],
+        [(n, t, _rand_link(f"l{n}", rnd)) for n, t in tiers[1:]],
+        wrapper=WrapperModel(),
+    )
+
+
+def _tree_comp(n, rnd):
+    """A random out-forest: every item consumed at most once, every
+    stage fed by at most one producer, results pure sinks — exactly
+    ``TreeDPPlanner.applicable``'s domain.  Conditional branches get
+    ``exec_prob`` below their parent's (validate()'s coherence rule)."""
+    sources = [DataItem("frame", rnd.randrange(1_000, 600_000), CLIENT)]
+    # unconsumed stage outputs: (item name, producing stage index)
+    open_outputs = []
+    stage_prob = []
+    stages = []
+    for i in range(n):
+        if i == 0 or (not open_outputs) or rnd.random() < 0.25:
+            # a new root: feeds off a fresh source (consumed once)
+            src = DataItem(f"src{i}", rnd.randrange(64, 200_000), CLIENT)
+            sources.append(src)
+            inputs = [src.name]
+            parent_prob = 1.0
+        else:
+            name, pi = open_outputs.pop(rnd.randrange(len(open_outputs)))
+            inputs = [name]
+            parent_prob = stage_prob[pi]
+            if rnd.random() < 0.3:  # optional fresh side source
+                src = DataItem(f"side{i}", rnd.randrange(16, 4_096), CLIENT)
+                sources.append(src)
+                inputs.append(src.name)
+        p = parent_prob if rnd.random() < 0.6 else parent_prob * rnd.uniform(
+            0.2, 1.0
+        )
+        outs = tuple(
+            DataItem(f"x{i}_{j}", rnd.randrange(64, 120_000))
+            for j in range(rnd.choice((1, 1, 2)))
+        )
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=rnd.uniform(1e8, 4e9),
+                inputs=tuple(inputs),
+                outputs=outs,
+                parallel_fraction=rnd.uniform(0.7, 1.0),
+                exec_prob=p,
+            )
+        )
+        stage_prob.append(p)
+        for o in outs:
+            open_outputs.append((o.name, i))
+    # results: the leftover unconsumed outputs (pure sinks), at least one
+    results = tuple(name for name, _ in open_outputs) or (
+        stages[-1].outputs[0].name,
+    )
+    comp = StagedComputation("rand_tree", tuple(sources), tuple(stages), results)
+    comp.validate()
+    return comp
+
+
+def _chain_comp(n, rnd, shared_source=False):
+    """A linear chain, optionally with a source consumed by several
+    stages (the ``h_prev`` pattern chain_dp's holder-set DP prices)."""
+    sources = [DataItem("frame", rnd.randrange(1_000, 600_000), CLIENT)]
+    if shared_source:
+        sources.append(DataItem("h_prev", rnd.randrange(64, 2_048), CLIENT))
+    stages = []
+    prev = "frame"
+    p = 1.0
+    for i in range(n):
+        out = DataItem(f"x{i}", rnd.randrange(64, 120_000))
+        inputs = [prev]
+        if shared_source and (i == 0 or i == n - 1):
+            inputs.append("h_prev")
+        if rnd.random() < 0.3:
+            p *= rnd.uniform(0.3, 1.0)
+        stages.append(
+            Stage(
+                name=f"s{i}",
+                flops=rnd.uniform(1e8, 4e9),
+                inputs=tuple(inputs),
+                outputs=(out,),
+                parallel_fraction=rnd.uniform(0.7, 1.0),
+                exec_prob=p,
+            )
+        )
+        prev = out.name
+    comp = StagedComputation("rand_chain", tuple(sources), tuple(stages), (prev,))
+    comp.validate()
+    return comp
+
+
+def _case_dims(rnd):
+    """(k tiers, n stages) with the plan lattice capped at 512."""
+    k = rnd.choice((2, 2, 3))
+    n = rnd.randrange(2, 10) if k == 2 else rnd.randrange(2, 6)
+    assert k**n <= 512
+    return k, n
+
+
+# ---------------------------------------------------------------------------
+# property tests: DP vs exhaustive, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_tree_dp_matches_exhaustive_on_random_trees(seed):
+    """On every randomized out-tree with lattice <= 512 the tree DP's
+    plan prices *exactly* (==) what exhaustive search finds — both
+    planners return ``engine.evaluate`` reports, so any argmin
+    disagreement would surface as a total_time difference."""
+    rnd = random.Random(seed)
+    k, n = _case_dims(rnd)
+    topo = _rand_topology(k, rnd, rnd.choice(("chain", "star")))
+    comp = _tree_comp(n, rnd)
+    assert TreeDPPlanner.applicable(comp)
+    engine = CostEngine(topo)
+    ex = PLANNERS["exhaustive"].plan(comp, engine)
+    dp = PLANNERS["tree_dp"].plan(comp, engine)
+    assert dp.total_time == ex.total_time
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_chain_dp_and_tree_dp_agree_on_linear_chains(seed):
+    """A chain is the degenerate out-tree: chain_dp, tree_dp and
+    exhaustive must all price the optimum identically, and the two DPs
+    must pick the same placements.  Chains with a shared source go
+    through chain_dp's holder-set state (tree_dp rejects them)."""
+    rnd = random.Random(seed)
+    k, n = _case_dims(rnd)
+    shared = rnd.random() < 0.4
+    topo = _rand_topology(k, rnd, rnd.choice(("chain", "star")))
+    comp = _chain_comp(n, rnd, shared_source=shared)
+    assert ChainDPPlanner.applicable(comp)
+    engine = CostEngine(topo)
+    ex = PLANNERS["exhaustive"].plan(comp, engine)
+    chain = PLANNERS["chain_dp"].plan(comp, engine)
+    assert chain.total_time == ex.total_time
+    if shared:
+        # h_prev consumed twice: residency coupling, out-tree DP exits
+        assert not TreeDPPlanner.applicable(comp)
+    else:
+        assert TreeDPPlanner.applicable(comp)
+        tree = PLANNERS["tree_dp"].plan(comp, engine)
+        assert tree.total_time == ex.total_time
+        assert tree.placements == chain.placements
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_dag_fallback_matches_exhaustive_on_rgbd_tracking(seed):
+    """The registry's true DAG (shared h_prev + reseed join) is outside
+    every exact DP's domain; the multi-seed coordinate descent still
+    finds the exhaustive optimum on randomized <=3-tier topologies
+    (lattice <= 3^4 = 81)."""
+    rnd = random.Random(seed)
+    comp = rgbd_tracking()
+    assert not TreeDPPlanner.applicable(comp)
+    assert not ChainDPPlanner.applicable(comp)
+    assert TreeDPPlanner.dag_applicable(comp)
+    topo = _rand_topology(rnd.choice((2, 3)), rnd, rnd.choice(("chain", "star")))
+    engine = CostEngine(topo)
+    ex = PLANNERS["exhaustive"].plan(comp, engine)
+    dag = PLANNERS["tree_dp"].plan(comp, engine)
+    assert dag.total_time == ex.total_time
+
+
+# ---------------------------------------------------------------------------
+# single-crossing dedupe (satellite 1)
+# ---------------------------------------------------------------------------
+
+
+def test_single_crossing_prices_all_home_once():
+    """The degenerate lo == hi window (all stages at home) used to be
+    re-evaluated for every (remote, window) pair; now it is priced
+    exactly once and the planner issues exactly
+    1 + (k-1) * n*(n+1)/2 evaluate calls."""
+    rnd = random.Random(0x51C)
+    n = 4
+    comp = _chain_comp(n, rnd)
+    topo = _rand_topology(3, rnd, "star")
+    engine = CostEngine(topo)
+    k = len(engine.placement_tiers())
+
+    calls = []
+    real_evaluate = engine.evaluate
+    engine.evaluate = lambda c, p: calls.append(tuple(p)) or real_evaluate(c, p)
+
+    rep = PLANNERS["single_crossing"].plan(comp, engine)
+    home = engine.topology.home
+    all_home = tuple(home for _ in range(n))
+    assert calls.count(all_home) == 1
+    assert len(calls) == 1 + (k - 1) * n * (n + 1) // 2
+    # and the dedupe did not change the answer
+    engine.evaluate = real_evaluate
+    ex = PLANNERS["exhaustive"].plan(comp, engine)
+    windows = {
+        tuple(r if lo <= i < hi else home for i in range(n))
+        for r in engine.placement_tiers()
+        for lo in range(n)
+        for hi in range(lo, n + 1)
+    }
+    best_window = min(
+        (real_evaluate(comp, p) for p in windows), key=lambda r: r.total_time
+    )
+    assert rep.total_time == best_window.total_time
+    assert rep.total_time >= ex.total_time
+
+
+# ---------------------------------------------------------------------------
+# auto_planner dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_auto_planner_dispatch_order():
+    rnd = random.Random(7)
+    eng2 = CostEngine(_rand_topology(2, rnd, "chain"))
+    eng3 = CostEngine(_rand_topology(3, rnd, "star"))
+    # tiny lattice: exhaustive regardless of structure
+    small = _chain_comp(3, rnd)
+    assert auto_planner(small, eng2, 4096).name == "exhaustive"
+    # long chain: lattice 3^12 blows the 512 preference -> chain DP
+    long_chain = _chain_comp(12, rnd)
+    assert auto_planner(long_chain, eng3, 4096).name == "chain_dp"
+    # branching tree of the same size: tree DP
+    long_tree = _tree_comp(12, rnd)
+    while ChainDPPlanner.applicable(long_tree):  # ensure it truly branches
+        long_tree = _tree_comp(12, rnd)
+    assert auto_planner(long_tree, eng3, 4096).name == "tree_dp"
+    # true DAG, lattice within budget: exhaustive; beyond it: crossing
+    dag = rgbd_tracking()
+    assert auto_planner(dag, eng3, 4096).name == "exhaustive"
+    wide = StagedComputation(
+        "wide",
+        dag.sources,
+        dag.stages * 3,
+        dag.results,
+    )
+    assert auto_planner(wide, eng3, 4096).name == "single_crossing"
+
+
+# ---------------------------------------------------------------------------
+# fused() edge cases (satellite 3)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_passthrough_result_not_reemitted():
+    """A source listed in results already resides at its origin; the
+    fused stage must not re-produce it (that would charge a bogus
+    ship-home from the fused stage's tier)."""
+    comp = StagedComputation(
+        "pt",
+        sources=(
+            DataItem("frame", 100_000, CLIENT),
+            DataItem("h_prev", 108, CLIENT),
+        ),
+        stages=(
+            Stage("s0", 1e9, ("frame", "h_prev"), (DataItem("h_next", 108),)),
+        ),
+        results=("h_next", "h_prev"),
+    )
+    fused = comp.fused()
+    out_names = {o.name for o in fused.stages[0].outputs}
+    assert out_names == {"h_next"}
+    assert fused.results == ("h_next", "h_prev")
+    fused.validate()
+    rnd = random.Random(3)
+    engine = CostEngine(_rand_topology(2, rnd, "chain"))
+    for t in engine.placement_tiers():
+        rep = engine.evaluate(fused, (t,))
+        assert rep.total_time > 0.0
+
+
+def test_fused_zero_flops_has_zero_parallel_fraction():
+    comp = StagedComputation(
+        "zero",
+        sources=(DataItem("a", 64, CLIENT),),
+        stages=(
+            Stage("s0", 0.0, ("a",), (DataItem("b", 64),)),
+            Stage("s1", 0.0, ("b",), (DataItem("c", 64),)),
+        ),
+        results=("c",),
+    )
+    fused = comp.fused()
+    assert fused.stages[0].flops == 0.0
+    assert fused.stages[0].parallel_fraction == 0.0
+
+
+def test_fused_empty_pipeline_raises():
+    comp = StagedComputation(
+        "empty", sources=(DataItem("a", 64, CLIENT),), stages=(), results=()
+    )
+    with pytest.raises(ValueError, match="no stages"):
+        comp.fused()
+
+
+def test_fused_weights_flops_by_exec_prob():
+    comp = StagedComputation(
+        "cond",
+        sources=(DataItem("a", 64, CLIENT),),
+        stages=(
+            Stage(
+                "always",
+                4e9,
+                ("a",),
+                (DataItem("b", 64),),
+                parallel_fraction=1.0,
+            ),
+            Stage(
+                "rare",
+                6e9,
+                ("b",),
+                (DataItem("c", 64),),
+                parallel_fraction=0.5,
+                exec_prob=0.25,
+            ),
+        ),
+        results=("c",),
+    )
+    fused = comp.fused()
+    assert fused.stages[0].flops == 4e9 + 0.25 * 6e9
+    expected_pfrac = (4e9 * 1.0 + 0.25 * 6e9 * 0.5) / (4e9 + 0.25 * 6e9)
+    assert fused.stages[0].parallel_fraction == expected_pfrac
+
+
+# ---------------------------------------------------------------------------
+# exec_prob semantics (tentpole a)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_incoherent_exec_prob():
+    src = (DataItem("a", 64, CLIENT),)
+    for bad in (0.0, -0.5, 1.5):
+        comp = StagedComputation(
+            "bad",
+            src,
+            (Stage("s", 1e9, ("a",), (DataItem("b", 64),), exec_prob=bad),),
+            ("b",),
+        )
+        with pytest.raises(ValueError, match="exec_prob"):
+            comp.validate()
+    # a stage cannot run more often than the branch feeding it
+    comp = StagedComputation(
+        "incoherent",
+        src,
+        (
+            Stage("s0", 1e9, ("a",), (DataItem("b", 64),), exec_prob=0.3),
+            Stage("s1", 1e9, ("b",), (DataItem("c", 64),), exec_prob=0.9),
+        ),
+        ("c",),
+    )
+    with pytest.raises(ValueError, match="exceeds"):
+        comp.validate()
+
+
+def test_expected_cost_pricing_and_linearized():
+    """A conditional branch prices strictly below its forced-
+    unconditional variant on any placement; at exec_prob = 1.0 the
+    computation and its linearized() are the same object and price
+    identically."""
+    rnd = random.Random(11)
+    topo = _rand_topology(2, rnd, "chain")
+    engine = CostEngine(topo)
+    comp = multi_hand()
+    lin = comp.linearized()
+    assert lin is not comp
+    assert all(s.exec_prob == 1.0 for s in lin.stages)
+    n = len(comp.stages)
+    for t in engine.placement_tiers():
+        placements = tuple(t for _ in range(n))
+        assert (
+            engine.evaluate(comp, placements).total_time
+            < engine.evaluate(lin, placements).total_time
+        )
+    uncond = solo_landmark()
+    assert uncond.linearized() is uncond
+
+
+# ---------------------------------------------------------------------------
+# workload registry (tentpole c)
+# ---------------------------------------------------------------------------
+
+
+def test_workload_registry_applicability_matrix():
+    """Each registry entry exercises a distinct planner domain — the
+    whole point of mixing them in one fleet."""
+    suite = workload_suite()
+    assert tuple(c.name for c in suite) == tuple(WORKLOADS)
+    matrix = {
+        "solo_landmark": (True, True),  # (chain_dp, tree_dp)
+        "multi_hand": (False, True),
+        "full_gesture": (False, True),
+        "rgbd_tracking": (False, False),
+    }
+    for comp in suite:
+        chain_ok, tree_ok = matrix[comp.name]
+        assert ChainDPPlanner.applicable(comp) == chain_ok, comp.name
+        assert TreeDPPlanner.applicable(comp) == tree_ok, comp.name
+        assert TreeDPPlanner.dag_applicable(comp)
+        comp.validate()
+        comp.fused().validate()
+        comp.linearized().validate()
+
+
+def test_workload_suite_subset_and_hardware_alias():
+    from repro.sim import hardware
+
+    sub = workload_suite(("multi_hand", "solo_landmark"))
+    assert tuple(c.name for c in sub) == ("multi_hand", "solo_landmark")
+    mix = hardware.mixed_workloads()
+    assert tuple(c.name for c in mix) == tuple(WORKLOADS)
+    named = hardware.mixed_workloads(["rgbd_tracking"])
+    assert tuple(c.name for c in named) == ("rgbd_tracking",)
+
+
+def test_workload_dags_plan_end_to_end():
+    """Every registry workload plans on a realistic 3-tier chain via
+    every applicable planner, and the conditional pipelines plan
+    cheaper than their linearized variants (the fleet_bench --mixed
+    effect, at the single-plan level)."""
+    from repro.sim import hardware
+
+    topo = hardware.three_tier_environment()
+    engine = CostEngine(topo)
+    for comp in workload_suite():
+        rep = PLANNERS["tree_dp"].plan(comp, engine)
+        assert rep.total_time > 0.0
+        if any(s.exec_prob < 1.0 for s in comp.stages):
+            lin = PLANNERS["tree_dp"].plan(comp.linearized(), engine)
+            assert rep.total_time < lin.total_time

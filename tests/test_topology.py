@@ -265,14 +265,67 @@ def test_chain_dp_matches_exhaustive_deterministic_plan():
     assert dp.total_time == ex.total_time
 
 
-def test_chain_dp_rejects_non_chains():
-    """Residency-reusing computations fall outside the DP's domain."""
+def test_chain_dp_admits_shared_sources_exactly():
+    """A source consumed by several stages (the tracker's ``h_prev``
+    pattern) used to trip the ``consumed > 1`` guard and silently demote
+    to single-crossing.  The residency-augmented DP now admits it AND
+    matches exhaustive exactly (the admit side was right; the naive
+    per-consumer transfer pricing was what had to go)."""
     src = DataItem("frame", 1_000_000, CLIENT)
     stages = (
         Stage("a", 1e9, ("frame",), (DataItem("y1", 10),), 0.9),
         Stage("b", 1e9, ("frame", "y1"), (DataItem("y2", 10),), 0.9),
     )
     comp = StagedComputation("t", (src,), stages, ("y2",))
+    assert ChainDPPlanner.applicable(comp)
+    rnd = random.Random(0xBEEF)
+    for _ in range(12):
+        k = rnd.choice((2, 3))
+        topo = _rand_topology(k, rnd, rnd.choice(("chain", "star")))
+        engine = CostEngine(topo)
+        ex = PLANNERS["exhaustive"].plan(comp, engine)
+        dp = PLANNERS["chain_dp"].plan(comp, engine)
+        assert dp.total_time == ex.total_time
+    # randomized longer chains with a shared early source
+    for trial in range(12):
+        r2 = random.Random(1000 + trial)
+        n = r2.randrange(2, 5)
+        sources = (
+            DataItem("frame", r2.randrange(1_000, 800_000), CLIENT),
+            DataItem("h_prev", r2.randrange(64, 4096), CLIENT),
+        )
+        sts = []
+        prev = "frame"
+        for i in range(n):
+            out = DataItem(f"x{i}", r2.randrange(64, 120_000))
+            inputs = (prev, "h_prev") if i in (0, n - 1) else (prev,)
+            sts.append(
+                Stage(f"s{i}", r2.uniform(1e8, 4e9), inputs, (out,),
+                      r2.uniform(0.8, 1.0))
+            )
+            prev = out.name
+        shared_comp = StagedComputation(
+            "shared", sources, tuple(sts), (prev,)
+        )
+        assert ChainDPPlanner.applicable(shared_comp)
+        topo = _rand_topology(r2.choice((2, 3)), r2, "star")
+        engine = CostEngine(topo)
+        ex = PLANNERS["exhaustive"].plan(shared_comp, engine)
+        dp = PLANNERS["chain_dp"].plan(shared_comp, engine)
+        assert dp.total_time == ex.total_time
+
+
+def test_chain_dp_rejects_non_chains():
+    """Computations that re-consume a *stage output* (not a source) or
+    skip stages still fall outside the DP's domain."""
+    src = DataItem("frame", 1_000_000, CLIENT)
+    mid = DataItem("y1", 50_000)
+    stages = (
+        Stage("a", 1e9, ("frame",), (mid,), 0.9),
+        Stage("b", 1e9, ("y1",), (DataItem("y2", 10),), 0.9),
+        Stage("c", 1e9, ("y1", "y2"), (DataItem("y3", 10),), 0.9),
+    )
+    comp = StagedComputation("t", (src,), stages, ("y3",))
     assert not ChainDPPlanner.applicable(comp)
     with pytest.raises(ValueError):
         PLANNERS["chain_dp"].plan(comp, CostEngine(_env().as_topology()))
