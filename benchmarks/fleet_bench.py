@@ -85,12 +85,25 @@ migration + codec + mid-run drift) run on BOTH engines with a
 ``Telemetry`` object attached.  It hard-asserts the two engines emit
 byte-identical telemetry (frame spans, metric snapshots), verifies
 every frame's span fold equals its loop time exactly, exports the
-Chrome trace-event JSON to ``fleet_trace.json`` (gitignored — load it
-in Perfetto or chrome://tracing), prints the per-class attribution
+Chrome trace-event JSON to ``fleet_trace.json`` under the ``--out``
+directory (default ``bench_out/``, gitignored — load it in Perfetto or
+chrome://tracing), prints the per-class and per-workload attribution
 table, and writes ``BENCH_fleet_trace.json``.  The ``--events`` sweep
 additionally times a telemetry-armed vector arm so enabled-path
 overhead shows up in the artifact; the unchanged 2x speedup gate on
 the untraced arm is what proves the disabled hooks cost nothing.
+
+``--doctor`` is the SLO fault-injection gate: every fault in
+``cluster.slo.FAULTS`` (edge thermal throttle, shared-cell collapse,
+lossy keyframe link, migration flap) is injected on the canonical
+doctor star (``hardware.doctor_star``) with the online ``SLOMonitor``
+armed, on BOTH engines.  CI asserts the healthy arm opens zero
+incidents, that arming the monitor is a bit-for-bit no-op on the
+simulation (the ``slo=None`` off-switch golden), that both engines
+emit byte-identical incident reports, and that the doctor's
+aggregate top-ranked root cause (:func:`repro.cluster.doctor_verdict`)
+names each injected fault.  Incident reports land in ``--out`` and the
+verdict table in ``BENCH_fleet_doctor.json``.
 """
 
 from __future__ import annotations
@@ -98,19 +111,25 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import pathlib
 import time
 
 from repro.cluster import (
+    DOCTOR_CLASSES,
+    FAULTS,
     MigrationConfig,
     PlanCache,
+    SLOMonitor,
     Telemetry,
     capacity_sweep,
+    doctor_verdict,
     run_fleet,
 )
 from repro.cluster.fleet import LinkDrift
 from repro.cluster.telemetry import SPAN_ORDER, _pctile as _tel_pctile
 from repro.codec import CodecConfig, identity_config, sequence_motion
 from repro.core.offload import Policy
+from repro.core.workloads import workload_suite
 from repro.net import links
 from repro.sim import hardware
 
@@ -176,6 +195,19 @@ EVENTS_MIN_SPEEDUP = 2.0
 EVENTS_BENCH_REPS = 3
 # (clients, edges, frames) per sweep shape; smoke runs the first only
 EVENTS_SHAPES = ((256, 16, 120), (1000, 64, 100))
+
+# the doctor gate: every fault in cluster.slo.FAULTS is injected on the
+# canonical doctor star (hardware.doctor_star — 3 hetero batching edges
+# over one shared cell) with the full stack armed, on BOTH engines; CI
+# asserts the healthy arm opens zero incidents, the armed monitor is a
+# bit-for-bit no-op on the simulation, both engines emit byte-identical
+# incident reports, and the doctor's aggregate verdict names the
+# injected fault.  The camera runs at 12 fps: the mixed workloads'
+# healthy loops are 50-85 ms, so a 30 fps camera load-sheds
+# structurally and every arm would look sick (see slo.DOCTOR_CLASSES).
+DOCTOR_CLIENTS = 8
+DOCTOR_FRAMES = 300
+DOCTOR_CAMERA_FPS = 12
 
 # the open-loop scale sweep: heterogeneous classes on a wide star
 SCALE_NUM_EDGES = 64
@@ -863,7 +895,7 @@ def _scale_rows(client_counts, num_frames) -> tuple:
     return rows, summary
 
 
-def _trace_rows(smoke: bool) -> tuple:
+def _trace_rows(smoke: bool, out_dir) -> tuple:
     """Latency-attribution trace on the everything-armed hetero star.
 
     Runs BOTH engines with telemetry armed on the same workload
@@ -911,13 +943,14 @@ def _trace_rows(smoke: bool) -> tuple:
             "byte-identical across engines"
         )
     checked = tel_v.verify_exact()
-    doc = tel_v.export_chrome_trace(str(REPO_ROOT / "fleet_trace.json"))
+    trace_path = out_dir / "fleet_trace.json"
+    doc = tel_v.export_chrome_trace(str(trace_path))
     trace_events = doc["traceEvents"]
-    print(f"# wrote fleet_trace.json ({len(trace_events)} trace events)")
+    print(f"# wrote {trace_path} ({len(trace_events)} trace events)")
 
     totals = {name: 0.0 for name in SPAN_ORDER}
     loops = []
-    for (_c, _cls, _edge, _i, start, fin, spans) in tel_v.frames:
+    for (_c, _cls, _wl, _edge, _i, start, fin, spans) in tel_v.frames:
         loops.append(fin - start)
         for name, d in zip(SPAN_ORDER, spans):
             totals[name] += d
@@ -950,6 +983,152 @@ def _trace_rows(smoke: bool) -> tuple:
         "smoke": smoke,
     }
     return rows, summary, tel_v.format_attribution_table()
+
+
+def _doctor_run(engine: str, drifts, migration, monitor):
+    """One everything-armed run of the canonical doctor scenario."""
+    topo, classes = hardware.doctor_star()
+    return run_fleet(
+        topo,
+        hardware.paper_staged(),
+        num_clients=DOCTOR_CLIENTS,
+        num_frames=DOCTOR_FRAMES,
+        dispatch="least_queue",
+        policy=Policy.AUTO,
+        granularity="multi_step",
+        client_classes=classes,
+        workloads=workload_suite(),
+        codec=CodecConfig(
+            base=hardware.codec_point(entropy=True),
+            motion=sequence_motion(),
+            resync_bound=4,
+        ),
+        camera_fps=DOCTOR_CAMERA_FPS,
+        migration=migration,
+        gather_window=2e-3,
+        drifts=list(drifts),
+        slo=monitor,
+        engine=engine,
+    )
+
+
+def _doctor_rows(smoke: bool, out_dir) -> tuple:
+    """Fault-injection gate: the doctor must name every injected fault.
+
+    Healthy arm first (both engines): zero incidents, byte-identical
+    monitor state across engines, and the armed monitor bit-for-bit
+    identical to the ``slo=None`` run — observation must not perturb
+    the simulation.  Then each ``FAULTS`` entry runs on both engines;
+    the gate asserts byte-identical incident reports and that
+    :func:`doctor_verdict`'s top-ranked cause equals the spec's
+    ``expected`` label.  Incident reports land in ``out_dir``.
+    """
+    rows = []
+    mons = {}
+    for eng in ("object", "vector"):
+        mon = SLOMonitor(classes=DOCTOR_CLASSES)
+        t0 = time.perf_counter()
+        armed = _doctor_run(eng, (), MigrationConfig(), mon)
+        wall = time.perf_counter() - t0
+        plain = _doctor_run(eng, (), MigrationConfig(), None)
+        for ca, cb in zip(armed.clients, plain.clients):
+            if (
+                ca.stats.processed != cb.stats.processed
+                or ca.stats.duration != cb.stats.duration
+                or ca.total_wait != cb.total_wait
+            ):
+                raise SystemExit(
+                    f"arming the SLO monitor perturbed client "
+                    f"{ca.client} ({eng} engine) — slo= must be a "
+                    f"bit-for-bit off-switch"
+                )
+        if [e.admitted for e in armed.edges] != [
+            e.admitted for e in plain.edges
+        ]:
+            raise SystemExit(
+                f"arming the SLO monitor changed per-edge admissions "
+                f"({eng} engine)"
+            )
+        mons[eng] = mon
+        rows.append((
+            f"fleet/doctor_healthy_{eng}",
+            wall * 1e6,
+            f"incidents={len(mon.incidents)};wall_s={wall:.2f}",
+        ))
+    if mons["object"].summary_json() != mons["vector"].summary_json():
+        raise SystemExit(
+            "engines disagree on the healthy monitor state — SLO "
+            "monitoring must be byte-identical across engines"
+        )
+    if mons["object"].incidents:
+        raise SystemExit(
+            f"healthy doctor arm opened "
+            f"{len(mons['object'].incidents)} incident(s) — the "
+            f"baseline scenario is sick, fault verdicts are meaningless"
+        )
+    print("# healthy arm: 0 incidents, engines byte-identical, "
+          "slo=None golden")
+
+    faults_out = {}
+    for name, spec in FAULTS.items():
+        mig = (
+            None
+            if spec.disable_migration
+            else (spec.migration or MigrationConfig())
+        )
+        per_engine = {}
+        for eng in ("object", "vector"):
+            mon = SLOMonitor(classes=DOCTOR_CLASSES)
+            _doctor_run(eng, spec.drifts, mig, mon)
+            per_engine[eng] = mon
+        mon_o, mon_v = per_engine["object"], per_engine["vector"]
+        if mon_o.summary_json() != mon_v.summary_json():
+            raise SystemExit(
+                f"{name}: engines disagree on the monitor summary — "
+                f"incident state must be byte-identical across engines"
+            )
+        report = mon_v.format_incident_report()
+        if mon_o.format_incident_report() != report:
+            raise SystemExit(
+                f"{name}: engines disagree on the incident report"
+            )
+        top, scores = doctor_verdict(mon_v)
+        if top != spec.expected:
+            ranked = sorted(scores, key=lambda k: -scores[k])[:3]
+            raise SystemExit(
+                f"doctor misdiagnosed {name}: top cause {top!r} "
+                f"(ranked {ranked}), expected {spec.expected!r}"
+            )
+        misses = sum(i.misses for i in mon_v.incidents)
+        (out_dir / f"doctor_{name}.txt").write_text(report)
+        rows.append((
+            f"fleet/doctor_{name}",
+            scores[top] * 1e6,
+            f"verdict={top};incidents={len(mon_v.incidents)};"
+            f"misses={misses}",
+        ))
+        faults_out[name] = {
+            "expected": spec.expected,
+            "verdict": top,
+            "incidents": len(mon_v.incidents),
+            "misses": misses,
+            "top_score": round(scores[top], 6),
+        }
+        print(f"# {name}: verdict={top} (expected {spec.expected}) — OK")
+    print(f"# wrote {len(faults_out)} incident reports to {out_dir}")
+    summary = {
+        "scenario": {
+            "clients": DOCTOR_CLIENTS,
+            "frames": DOCTOR_FRAMES,
+            "camera_fps": DOCTOR_CAMERA_FPS,
+            "edges": 3,
+            "cell_capacity": 2,
+        },
+        "healthy_incidents": 0,
+        "faults": faults_out,
+        "smoke": smoke,
+    }
+    return rows, summary
 
 
 def bench() -> list:
@@ -1020,6 +1199,24 @@ def main() -> None:
         "latency-attribution table",
     )
     ap.add_argument(
+        "--doctor",
+        action="store_true",
+        help="fault-injection gate: inject every cluster.slo fault on "
+        "the doctor star with the SLO monitor armed, on BOTH engines; "
+        "assert a clean healthy arm, a bit-for-bit slo=None "
+        "off-switch, byte-identical incident reports across engines, "
+        "and that the doctor's top-ranked cause names each injected "
+        "fault; writes BENCH_fleet_doctor.json",
+    )
+    ap.add_argument(
+        "--out",
+        type=pathlib.Path,
+        default=None,
+        help="directory for exported artifacts (Chrome traces, "
+        "incident reports); default bench_out/ at the repo root "
+        "(gitignored)",
+    )
+    ap.add_argument(
         "--grid",
         action="store_true",
         help="with --migration: emit a weak-factor x client-count JSON "
@@ -1036,6 +1233,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.grid and not args.migration:
         ap.error("--grid requires --migration")
+    out_dir = args.out if args.out is not None else REPO_ROOT / "bench_out"
+    out_dir.mkdir(parents=True, exist_ok=True)
     if args.migration and args.grid:
         # span both regimes: factors where the hotspot never saturates
         # (migration cannot pay) through the PR 4 gate shape (it does)
@@ -1046,8 +1245,10 @@ def main() -> None:
         )
         print(json.dumps(grid, indent=2))
         return
-    if args.trace:
-        rows, trace_summary, att_table = _trace_rows(args.smoke)
+    if args.doctor:
+        rows, doctor_summary = _doctor_rows(args.smoke, out_dir)
+    elif args.trace:
+        rows, trace_summary, att_table = _trace_rows(args.smoke, out_dir)
     elif args.mixed:
         counts = (
             (1, 2, 4, 6, 8, 12, 16)
@@ -1117,6 +1318,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+    if args.doctor:
+        write_bench_json("fleet_doctor", doctor_summary)
+        return
     if args.trace:
         print(att_table)
         write_bench_json("fleet_trace", trace_summary)

@@ -10,6 +10,18 @@ the CI step that keeps emitted artifacts honest against the checked-in
 schema (hand-rolled: the container has no jsonschema dependency, and
 the spec language we need is a dozen lines).
 
+Beyond structure, the *trajectory gate* compares each artifact's
+deterministic numeric fields (the ``trajectory`` section of the schema
+— capacity-knee shifts, attribution scores; never wall-clock rates)
+against the checked-in copy at git HEAD.  A freshly regenerated
+artifact whose knee drifted outside the tolerance band fails CI: an
+intentional retune commits the regenerated artifact (the comparison
+is then against itself and passes), an unintentional regression is
+caught before merge.  The comparison silently skips when there is no
+git checkout, no HEAD copy (a new artifact), or the two copies
+disagree on the ``smoke`` flag (different sweep regimes are not
+comparable).
+
 Spec language (see bench_schema.json): a spec is a type name (``int``,
 ``num``, ``str``, ``bool``, ``dict``, ``list``; a ``?`` suffix marks
 the key optional), a nested object listing the required keys of a dict
@@ -23,8 +35,9 @@ from __future__ import annotations
 
 import json
 import pathlib
+import subprocess
 import sys
-from typing import List
+from typing import List, Optional
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 SCHEMA_PATH = pathlib.Path(__file__).resolve().parent / "bench_schema.json"
@@ -80,6 +93,69 @@ def validate_file(path: pathlib.Path, schema: dict) -> List[str]:
     return errors
 
 
+def _resolve(doc, dotted: str) -> Optional[float]:
+    """Walk a dotted path; return the numeric leaf or None."""
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    if isinstance(cur, bool) or not isinstance(cur, (int, float)):
+        return None
+    return float(cur)
+
+
+def _head_copy(name: str) -> Optional[dict]:
+    """The committed (git HEAD) version of an artifact, or None when
+    outside a checkout / the artifact is new at HEAD / it won't parse."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:{name}"],
+            cwd=REPO_ROOT,
+            capture_output=True,
+            text=True,
+            timeout=10,
+        )
+    except Exception:
+        return None
+    if out.returncode != 0 or not out.stdout:
+        return None
+    try:
+        return json.loads(out.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check_trajectory(
+    path: pathlib.Path, doc: dict, schema: dict
+) -> List[str]:
+    """Compare the artifact's deterministic fields against git HEAD."""
+    traj = schema.get("trajectory", {})
+    name = path.name[len("BENCH_") : -len(".json")]
+    fields = traj.get("fields", {}).get(name)
+    if not fields:
+        return []
+    old = _head_copy(path.name)
+    if old is None:
+        return []
+    if old.get("smoke") != doc.get("smoke"):
+        return []  # different sweep regimes are not comparable
+    rel_tol = float(traj.get("rel_tol", 0.35))
+    errors: List[str] = []
+    for dotted in fields:
+        prev, cur = _resolve(old, dotted), _resolve(doc, dotted)
+        if prev is None or cur is None:
+            continue  # field absent on one side: structure gate's job
+        if abs(cur - prev) > rel_tol * max(abs(prev), 1e-9):
+            errors.append(
+                f"{path.name}: trajectory field {dotted} moved "
+                f"{prev:g} -> {cur:g} (outside the {rel_tol:.0%} band "
+                f"vs HEAD) — fix the regression, or commit the "
+                f"regenerated artifact if the retune is intentional"
+            )
+    return errors
+
+
 def main(argv: List[str]) -> int:
     schema = json.loads(SCHEMA_PATH.read_text())
     if argv:
@@ -92,6 +168,13 @@ def main(argv: List[str]) -> int:
     failures = 0
     for path in paths:
         errors = validate_file(path, schema)
+        if not errors:
+            try:
+                doc = json.loads(path.read_text())
+            except (OSError, json.JSONDecodeError):
+                doc = None
+            if doc is not None:
+                errors = check_trajectory(path, doc, schema)
         if errors:
             failures += 1
             for e in errors:

@@ -22,7 +22,11 @@ is raced against forced linearization.  A final pass reruns
 the codec fleet with telemetry armed: per-frame span traces exported as
 Chrome trace-event JSON (load ``fleet_trace.json`` in Perfetto or
 ``chrome://tracing``) and the latency-attribution table showing where
-each millisecond of p50/p99 loop time went.
+each millisecond of p50/p99 loop time went.  The closing act arms the
+online SLO monitor on the doctor star and throttles one edge mid-run:
+the burn-rate windows open a timestamped incident, the root-cause
+attributor diffs the incident window against the healthy baseline, and
+the printed report names the throttled edge's queue as the culprit.
 
   PYTHONPATH=src python examples/fleet_sim.py
 """
@@ -32,12 +36,16 @@ from __future__ import annotations
 import dataclasses
 
 from repro.cluster import (
+    DOCTOR_CLASSES,
     LinkDrift,
     MigrationConfig,
+    SLOMonitor,
     Telemetry,
     capacity_sweep,
+    doctor_verdict,
     run_fleet,
 )
+from repro.cluster.fleet import ServiceDrift
 from repro.codec import CodecConfig, sequence_motion
 from repro.core.offload import Policy
 from repro.net import links
@@ -215,6 +223,38 @@ def main() -> None:
         "open in Perfetto / chrome://tracing"
     )
     print(tel.format_attribution_table())
+
+    print("\n== SLO doctor: edge_1 thermally throttles 8x at t=1.5s ==")
+    # the canonical doctor star: 3 hetero edges behind one shared cell,
+    # mixed registry workloads at a 12 fps camera — the scenario the
+    # fault-injection gate (fleet_bench --doctor) certifies on both
+    # engines.  The monitor rides along as a Telemetry subclass; the
+    # burn-rate windows open incidents online and the attributor
+    # explains them against the rolling healthy baseline.
+    dtopo, dclasses = hardware.doctor_star()
+    mon = SLOMonitor(classes=DOCTOR_CLASSES)
+    run_fleet(
+        dtopo, comp, num_clients=8, num_frames=200,
+        dispatch="least_queue", policy=Policy.AUTO,
+        granularity="multi_step", client_classes=dclasses,
+        workloads=hardware.mixed_workloads(),
+        codec=CodecConfig(
+            base=hardware.codec_point(entropy=True),
+            motion=sequence_motion(), resync_bound=4,
+        ),
+        camera_fps=12, migration=MigrationConfig(), gather_window=2e-3,
+        drifts=[ServiceDrift(time=1.5, edge="edge_1", factor=8.0)],
+        slo=mon,
+    )
+    for wl, a in mon.attainment().items():
+        print(
+            f"  {wl:15s} [{a['slo']:11s}] observed={a['observed']:4d} "
+            f"missed={a['misses']:3d} p99~{a['p99_est_ms']:6.1f}ms "
+            f"slow_burn={a['slow_burn']:.2f}"
+        )
+    print(mon.format_incident_report())
+    top, _scores = doctor_verdict(mon)
+    print(f"doctor verdict: {top}")
 
 
 if __name__ == "__main__":

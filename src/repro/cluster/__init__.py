@@ -11,7 +11,9 @@ event engine (``run_fleet(engine="vector")``) that runs the same
 simulation event-for-event at a multiple of the object engine's
 throughput — the 10k-client sweep path, and ``telemetry`` for the
 opt-in observability layer (per-frame span traces, metrics registry,
-latency attribution) both engines feed identically.
+latency attribution) both engines feed identically; ``slo`` builds the
+online SLO monitor + fault-injected root-cause doctor on top of it
+(``run_fleet(slo=SLOMonitor(...))``).
 """
 
 from repro.cluster.dispatch import (  # noqa: F401
@@ -51,6 +53,19 @@ from repro.cluster.plancache import (  # noqa: F401
     PlanCache,
     comp_signature,
     topology_fingerprint,
+)
+from repro.cluster.slo import (  # noqa: F401
+    BEST_EFFORT,
+    DOCTOR_CLASSES,
+    FAULTS,
+    INTERACTIVE,
+    SLO_CLASSES,
+    FaultSpec,
+    Incident,
+    SLOClass,
+    SLOMonitor,
+    doctor_verdict,
+    slo_of,
 )
 from repro.cluster.telemetry import (  # noqa: F401
     SPAN_ORDER,

@@ -142,6 +142,7 @@ class SlotServer:
             self.peak_load = ld
         if self.telemetry is not None:
             self.telemetry.occupancy_sample(self.name, arrival, ld)
+            self.telemetry.wait_sample(self.name, arrival, start - arrival)
         return start, finish
 
     @property
@@ -358,6 +359,8 @@ class BatchingSlotServer:
         for arrival, _, done in items:
             heapq.heappush(self._finishes, finish)
             self.total_wait += start - arrival
+            if self.telemetry is not None:
+                self.telemetry.wait_sample(self.name, arrival, start - arrival)
             done(start, finish)
 
     @property

@@ -776,6 +776,7 @@ def run_fleet_vectorized(
                 for c in range(N)
             }
         )
+        tel.register_workloads({c: comp_of[c].name for c in range(N)})
 
     controller: Optional[MigrationController] = None
     if migration is not None:
@@ -876,8 +877,9 @@ def run_fleet_vectorized(
                         peak_l[si] = ld
                     if tel is not None:
                         # same order as SlotServer.admit + placed:
-                        # occupancy sample first, then the visit record
+                        # occupancy sample, wait sample, visit record
                         tel.occupancy_sample(edges[si], now, ld)
+                        tel.wait_sample(edges[si], now, s_start - now)
                         tel.visit_placed(c, False, now, s_start, s_end, service)
                     wait = (
                         wait_acc[c]

@@ -344,6 +344,7 @@ def run_fleet(
     adaptive_window: Optional[AdaptiveWindow] = None,
     telemetry=None,
     workloads: Optional[Sequence[StagedComputation]] = None,
+    slo=None,
 ) -> FleetResult:
     """Simulate ``num_clients`` identical clients sharing ``topo``'s edges.
 
@@ -429,9 +430,27 @@ def run_fleet(
     latency-attribution report.  Purely observational: both engines
     record the identical trace, and ``telemetry=None`` (default) is
     bit-for-bit the uninstrumented fleet.
+
+    SLO monitoring: passing an :class:`~repro.cluster.slo.SLOMonitor`
+    (``slo=SLOMonitor(...)``) arms *online* SLO tracking on top of the
+    telemetry hooks — streaming windowed quantile/attainment estimators
+    per (workload, SLO class), multi-window burn-rate alerting that
+    opens :class:`~repro.cluster.slo.Incident` records mid-run, and a
+    root-cause attributor that diffs each incident window's span
+    profile against the rolling healthy baseline.  An ``SLOMonitor``
+    *is* a ``Telemetry`` (same hooks, strictly more bookkeeping), so
+    ``slo=`` and ``telemetry=`` are mutually exclusive; ``slo=None``
+    (default) is bit-for-bit the unmonitored fleet on both engines.
     """
     if num_clients < 1:
         raise ValueError("need at least one client")
+    if slo is not None:
+        if telemetry is not None:
+            raise ValueError(
+                "pass either slo= or telemetry=, not both — an SLOMonitor "
+                "is a Telemetry and records the full trace itself"
+            )
+        telemetry = slo
     if granularity == "single_step":
         _prep = lambda cmp: cmp.fused()  # noqa: E731
     elif granularity == "multi_step":
@@ -607,6 +626,7 @@ def run_fleet(
                 for c in clients
             }
         )
+        tel.register_workloads({c.idx: c.comp.name for c in clients})
 
     controller: Optional[MigrationController] = None
     if migration is not None:

@@ -256,11 +256,13 @@ class Telemetry:
     * :meth:`attach` / :meth:`detach` — wire/unwire the ``PlanCache``
       event hook and the slot servers' ``telemetry`` attribute.
     * :meth:`register_clients` — client index -> hardware-class label.
+    * :meth:`register_workloads` — client index -> workload name.
     * :meth:`visit_placed` — one edge-server admission of one visit.
     * :meth:`frame_done` — one processed frame; builds its span tuple.
     * :meth:`migration` — one accepted move (the blackout interval).
-    * :meth:`occupancy_sample` / :meth:`batch_sample` — slot-server
-      load at admission / fused-launch batch size.
+    * :meth:`occupancy_sample` / :meth:`wait_sample` /
+      :meth:`batch_sample` — slot-server load / imposed queue wait at
+      admission / fused-launch batch size.
     * :meth:`count` / :meth:`cache_event` — counter bumps.
     * :meth:`finish_run` — end-of-run rollup from the ``FleetResult``.
 
@@ -270,14 +272,19 @@ class Telemetry:
 
     def __init__(self) -> None:
         self.metrics = MetricsRegistry()
-        # (client, class, edge, frame_idx, start, fin, spans) per frame,
-        # in engine finish-event order
-        self.frames: List[Tuple[int, str, str, int, float, float, Tuple[float, ...]]] = []
+        # (client, class, workload, edge, frame_idx, start, fin, spans)
+        # per frame, in engine finish-event order
+        self.frames: List[
+            Tuple[int, str, str, str, int, float, float, Tuple[float, ...]]
+        ] = []
         # (client, t0, duration, src_edge, dst_edge) per accepted move
         self.blackouts: List[Tuple[int, float, float, str, str]] = []
         # edge name -> [(t, in_flight at admission)]
         self.occupancy: Dict[str, List[Tuple[float, float]]] = {}
+        # edge name -> [(t, queue wait imposed on the admission at t)]
+        self.waits: Dict[str, List[Tuple[float, float]]] = {}
         self._client_class: Dict[int, str] = {}
+        self._client_workload: Dict[int, str] = {}
         # client -> visits of the in-flight frame:
         # (is_batch, arrived, svc_start, svc_end, solo_service)
         self._pending: Dict[int, List[Tuple[bool, float, float, float, float]]] = {}
@@ -302,6 +309,11 @@ class Telemetry:
     def register_clients(self, classes: Dict[int, str]) -> None:
         self._client_class.update(classes)
 
+    def register_workloads(self, workloads: Dict[int, str]) -> None:
+        """Client index -> workload (pipeline) name, for per-workload
+        attribution; both engines register before the first frame."""
+        self._client_workload.update(workloads)
+
     # -- engine hooks -------------------------------------------------------
 
     def count(self, name: str, n=1) -> None:
@@ -316,6 +328,15 @@ class Telemetry:
         if samples is None:
             samples = self.occupancy[edge] = []
         samples.append((t, load))
+
+    def wait_sample(self, edge: str, t: float, wait: float) -> None:
+        """One admission's imposed queue wait at ``edge`` (seconds) —
+        the per-edge localization signal the SLO doctor's root-cause
+        attributor reads (``repro.cluster.slo``)."""
+        samples = self.waits.get(edge)
+        if samples is None:
+            samples = self.waits[edge] = []
+        samples.append((t, wait))
 
     def batch_sample(self, edge: str, size: int) -> None:
         self.metrics.histogram("batch.size", lo=1.0, growth=2.0, nbuckets=16).observe(
@@ -431,7 +452,16 @@ class Telemetry:
         loop = fin - start
         spans = exact_spans((client_b, up, q_w, g_w, dec_b, comp_b, down), loop)
         self.frames.append(
-            (client, self._client_class.get(client, "?"), edge, frame_idx, start, fin, spans)
+            (
+                client,
+                self._client_class.get(client, "?"),
+                self._client_workload.get(client, "?"),
+                edge,
+                frame_idx,
+                start,
+                fin,
+                spans,
+            )
         )
         m = self.metrics
         m.histogram("frame.loop_s").observe(loop)
@@ -482,7 +512,7 @@ class Telemetry:
     def verify_exact(self) -> int:
         """Assert every frame's span fold equals its loop time exactly;
         returns the number of frames checked."""
-        for client, _cls, _edge, idx, start, fin, spans in self.frames:
+        for client, _cls, _wl, _edge, idx, start, fin, spans in self.frames:
             t = 0.0
             for d in spans:
                 t += d
@@ -520,7 +550,7 @@ class Telemetry:
                     "args": {"name": f"client {c} ({self._client_class[c]})"},
                 }
             )
-        for client, _cls, edge, idx, start, _fin, spans in self.frames:
+        for client, _cls, _wl, edge, idx, start, _fin, spans in self.frames:
             ts = start * 1e6
             for name, d in zip(SPAN_ORDER, spans):
                 if d > 0.0:
@@ -566,19 +596,34 @@ class Telemetry:
         return doc
 
     def attribution(self) -> Dict[str, Dict]:
-        """Latency attribution per client class (plus ``"all"``).
+        """Latency attribution per client class and per workload (plus
+        ``"all"``).
 
-        For each class: frame count, loop p50/p99, and per span its
+        For each group: frame count, loop p50/p99, and per span its
         total share of loop time, mean, p50, p99, and its mean over the
         slowest 1% of frames (``tail_mean`` — where did the p99 go?).
+        Workload groups are keyed ``wl:<name>`` to keep them disjoint
+        from hardware-class labels; a dimension with a single distinct
+        value collapses into ``"all"`` (which already tells its story).
         """
         groups: Dict[str, List[Tuple[float, Tuple[float, ...]]]] = {"all": []}
-        for _c, cls, _edge, _idx, start, fin, spans in self.frames:
+        cls_keys: List[str] = []
+        wl_keys: List[str] = []
+        for _c, cls, wl, _edge, _idx, start, fin, spans in self.frames:
             rec = (fin - start, spans)
             groups["all"].append(rec)
+            if cls not in groups:
+                cls_keys.append(cls)
             groups.setdefault(cls, []).append(rec)
-        if len(groups) == 2:  # single class: "all" already tells the story
-            groups = {"all": groups["all"]}
+            wk = f"wl:{wl}"
+            if wk not in groups:
+                wl_keys.append(wk)
+            groups.setdefault(wk, []).append(rec)
+        # a dimension with one distinct value duplicates "all" — drop it
+        if len(cls_keys) == 1:
+            del groups[cls_keys[0]]
+        if len(wl_keys) == 1:
+            del groups[wl_keys[0]]
         out: Dict[str, Dict] = {}
         for cls in sorted(groups, key=lambda k: (k != "all", k)):
             recs = groups[cls]

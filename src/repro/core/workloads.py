@@ -218,6 +218,19 @@ WORKLOADS: Dict[str, Callable[[], StagedComputation]] = {
     "rgbd_tracking": rgbd_tracking,
 }
 
+# workload name -> SLO class name (resolved by repro.cluster.slo, which
+# owns the SLOClass definitions — kept as strings here so the core
+# registry stays import-free of the cluster layer).  The tracking
+# pipelines are *interactive*: a user's hand is on screen and the paper's
+# real-time deadline applies.  The gesture head is *best-effort*
+# analytics riding the same features — late labels degrade gracefully.
+WORKLOAD_SLO: Dict[str, str] = {
+    "solo_landmark": "interactive",
+    "multi_hand": "interactive",
+    "full_gesture": "best_effort",
+    "rgbd_tracking": "interactive",
+}
+
 
 def workload_suite(
     names: Tuple[str, ...] = tuple(WORKLOADS),

@@ -405,6 +405,42 @@ def hetero_fleet_star(
     return topo, tuple(client_classes)
 
 
+def doctor_star(
+    num_edges: int = 3,
+    edge_capacity: int = 2,
+    cell: str = "cell0",
+    cell_capacity: int = 2,
+):
+    """The canonical "fleet doctor" scenario: a heterogeneous 3-edge
+    batching star whose spokes all share one 5G cell.
+
+    This is :func:`hetero_fleet_star` (CI-sized) with every spoke
+    declared ``medium=cell`` — the shape ``fleet_bench --doctor`` and
+    the SLO fault-injection harness (``cluster.slo.FAULTS``) are tuned
+    against: edges ``edge_0..2``, spokes ``5g_edge_0..2``, medium
+    ``cell0``.  Returns ``(topo, client_classes)`` like
+    ``hetero_fleet_star``."""
+    topo, classes = hetero_fleet_star(
+        num_edges=num_edges, edge_capacity=edge_capacity, batching=True
+    )
+    shared_links = {
+        pair: dataclasses.replace(
+            link, medium=cell, medium_capacity=cell_capacity
+        )
+        for pair, link in topo.links.items()
+    }
+    return (
+        Topology(
+            tiers=dict(topo.tiers),
+            links=shared_links,
+            home=topo.home,
+            wrapper=topo.wrapper,
+            wrapped=topo.wrapped,
+        ),
+        classes,
+    )
+
+
 def hotspot_star(
     num_edges: int = 3,
     edge_capacity: int = 2,

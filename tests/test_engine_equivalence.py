@@ -313,6 +313,79 @@ def test_engines_identical_under_randomized_drift_detection(
 
 
 # ---------------------------------------------------------------------------
+# SLO monitor: golden off-switch + engine-independent incident log
+# ---------------------------------------------------------------------------
+
+
+def _doctor_kwargs(num_frames=80):
+    from repro.codec import sequence_motion
+    from repro.core.offload import Policy
+
+    topo, classes = hardware.doctor_star()
+    return dict(
+        topo=topo,
+        comp=_COMP,
+        num_clients=8,
+        num_frames=num_frames,
+        dispatch="least_queue",
+        policy=Policy.AUTO,
+        granularity="multi_step",
+        client_classes=classes,
+        workloads=workload_suite(),
+        codec=crate.CodecConfig(
+            base=hardware.codec_point(entropy=True),
+            motion=sequence_motion(),
+            resync_bound=4,
+        ),
+        camera_fps=12,
+        migration=MigrationConfig(),
+        gather_window=2e-3,
+        drifts=[ServiceDrift(time=1.5, edge="edge_1", factor=8.0)],
+    )
+
+
+def test_slo_none_is_bit_for_bit_golden():
+    """Arming the SLO monitor must not perturb the simulation: the
+    armed run reproduces the ``slo=None`` run event-for-event, on BOTH
+    engines — every hook site sits behind a guard, and the monitor only
+    *observes*."""
+    from repro.cluster import DOCTOR_CLASSES, SLOMonitor
+
+    kw = _doctor_kwargs()
+    for eng in ("object", "vector"):
+        armed = run_fleet(
+            engine=eng,
+            cache=PlanCache(),
+            slo=SLOMonitor(classes=DOCTOR_CLASSES),
+            **kw,
+        )
+        plain = run_fleet(engine=eng, cache=PlanCache(), **kw)
+        _assert_equivalent(armed, plain)
+
+
+def test_slo_armed_engines_byte_identical():
+    """Both engines call the monitor hooks with bit-identical inputs in
+    the same order, so the full doctor output — telemetry frames, the
+    JSON rollup, the rendered incident report — is byte-equal across
+    engines, incidents included (the throttle drift guarantees at least
+    one opens)."""
+    from repro.cluster import DOCTOR_CLASSES, SLOMonitor, doctor_verdict
+
+    kw = _doctor_kwargs(num_frames=120)
+    monitors = {}
+    for eng in ("object", "vector"):
+        mon = SLOMonitor(classes=DOCTOR_CLASSES)
+        run_fleet(engine=eng, cache=PlanCache(), slo=mon, **kw)
+        monitors[eng] = mon
+    mo, mv = monitors["object"], monitors["vector"]
+    assert mo.frames == mv.frames  # full telemetry trace, spans included
+    assert mo.summary_json() == mv.summary_json()
+    assert mo.format_incident_report() == mv.format_incident_report()
+    assert mo.incidents  # the drift actually breached the SLO
+    assert doctor_verdict(mo) == doctor_verdict(mv)
+
+
+# ---------------------------------------------------------------------------
 # ArrayLoopStats: the vectorized engine's lazy LoopStats stand-in
 # ---------------------------------------------------------------------------
 

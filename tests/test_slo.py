@@ -1,0 +1,425 @@
+"""SLO monitor + fleet doctor tests (``repro.cluster.slo``).
+
+Three layers:
+
+* property tests of the streaming estimators against brute-force
+  references — the :class:`WindowedQuantile` documented error bound
+  (``v <= estimate <= v * growth`` inside the bucket range, clamps at
+  both ends) and :class:`BurnGauge` ring sums vs exact sliding-window
+  sums (including the ``fast_window == window`` edge);
+* unit tests of the attributor on hand-built profiles — category
+  ranking, per-edge/per-medium localization, and the common-cause rule
+  that pins a broad network excess on the shared cell;
+* small end-to-end runs of the doctor scenario asserting the incident
+  lifecycle (open on burn, close with hysteresis, attribution at
+  close) and the reporting surfaces.
+
+The full fault catalog (every ``FAULTS`` entry on both engines with
+byte-equality gates) runs in ``fleet_bench --doctor``; here we keep to
+CI-sized slices.
+"""
+
+import json
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import (
+    DOCTOR_CLASSES,
+    FAULTS,
+    MigrationConfig,
+    SLOClass,
+    SLOMonitor,
+    doctor_verdict,
+    run_fleet,
+    slo_of,
+)
+from repro.cluster.slo import (
+    BEST_EFFORT,
+    CATEGORIES,
+    INTERACTIVE,
+    BurnGauge,
+    Cause,
+    Incident,
+    WindowedQuantile,
+    _frame_categories,
+    _Profile,
+)
+from repro.cluster.telemetry import SPAN_ORDER
+from repro.codec import CodecConfig, sequence_motion
+from repro.core.offload import Policy
+from repro.core.workloads import WORKLOAD_SLO, workload_suite
+from repro.sim import hardware
+
+# ---------------------------------------------------------------------------
+# SLO classes
+# ---------------------------------------------------------------------------
+
+
+def test_slo_class_validation():
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline_s=0.1, target=1.0)
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline_s=0.0, target=0.9)
+    with pytest.raises(ValueError):
+        SLOClass("bad", deadline_s=0.1, target=0.9, window=8, fast_window=9)
+    c = SLOClass("ok", deadline_s=0.1, target=0.9)
+    assert c.budget == pytest.approx(0.1)
+
+
+def test_slo_of_mapping():
+    for name, cls_name in WORKLOAD_SLO.items():
+        assert slo_of(name).name == cls_name
+    # derived names resolve to their base workload's class
+    assert slo_of("full_gesture[fused]") is slo_of("full_gesture")
+    assert slo_of("full_gesture").name == "best_effort"
+    # unknown pipelines get the strict class, not a free pass
+    assert slo_of("mystery_pipeline") is INTERACTIVE
+    assert BEST_EFFORT.budget > INTERACTIVE.budget
+
+
+# ---------------------------------------------------------------------------
+# WindowedQuantile: documented error bound, property-tested
+# ---------------------------------------------------------------------------
+
+
+def _exact_ceil_rank(vals, q):
+    s = sorted(vals)
+    return s[max(1, math.ceil(q * len(s))) - 1]
+
+
+@st.composite
+def _quantile_streams(draw):
+    window = draw(st.integers(min_value=1, max_value=48))
+    n = draw(st.integers(min_value=1, max_value=96))
+    vals = [
+        draw(st.floats(min_value=5e-5, max_value=30.0)) for _ in range(n)
+    ]
+    q = draw(st.sampled_from([0.5, 0.9, 0.99]))
+    return window, vals, q
+
+
+@settings(max_examples=60, deadline=None)
+@given(_quantile_streams())
+def test_windowed_quantile_error_bound(stream):
+    window, vals, q = stream
+    wq = WindowedQuantile(window)
+    for v in vals:
+        wq.observe(v)
+    exact = _exact_ceil_rank(vals[-window:], q)
+    est = wq.quantile(q)
+    lo, top = wq.bounds[0], wq.bounds[-1]
+    growth = 2.0 ** 0.25
+    if exact <= lo:
+        assert est == lo
+    elif exact > top:
+        assert est == top
+    else:
+        assert exact <= est <= exact * growth * (1.0 + 1e-12)
+
+
+def test_windowed_quantile_edges():
+    wq = WindowedQuantile(4)
+    assert wq.quantile(0.99) == 0.0  # empty
+    wq.observe(1e-9)  # below lo clamps to the bottom bucket
+    assert wq.quantile(0.5) == wq.bounds[0]
+    for _ in range(4):
+        wq.observe(1e9)  # far above the top bound clamps to the top
+    assert wq.quantile(0.99) == wq.bounds[-1]
+    # retirement: the ring now holds only the overflow values, and four
+    # small ones push them all back out
+    for _ in range(4):
+        wq.observe(1e-3)
+    assert wq.quantile(0.99) <= 1e-3 * 2.0 ** 0.25
+    with pytest.raises(ValueError):
+        WindowedQuantile(0)
+    with pytest.raises(ValueError):
+        WindowedQuantile(4, growth=1.0)
+
+
+# ---------------------------------------------------------------------------
+# BurnGauge vs brute-force sliding windows
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=12),  # window
+    st.integers(min_value=1, max_value=12),  # fast window (clamped)
+    st.integers(min_value=0, max_value=(1 << 20) - 1),  # miss bit pattern
+    st.integers(min_value=1, max_value=60),  # observations
+)
+def test_burn_gauge_matches_brute_force(window, fastw, bits, n):
+    fastw = min(fastw, window)
+    slo = SLOClass(
+        "t", deadline_s=0.1, target=0.9, window=window, fast_window=fastw
+    )
+    g = BurnGauge(slo)
+    seq = []
+    for i in range(n):
+        bit = (bits >> (i % 20)) & 1
+        seq.append(bit)
+        g.observe(bool(bit))
+        assert g.slow_sum == sum(seq[-window:])
+        assert g.fast_sum == sum(seq[-fastw:])
+        assert g.fast_ready == (len(seq) >= fastw)
+
+
+def test_burn_gauge_alerting_and_hysteresis():
+    slo = SLOClass(
+        "t",
+        deadline_s=0.1,
+        target=0.9,
+        window=8,
+        fast_window=4,
+        fast_burn=2.0,
+        slow_burn=2.0,
+    )
+    g = BurnGauge(slo)
+    assert g.fast_burn == 0.0 and g.slow_burn == 0.0  # empty
+    g.observe(True)
+    # short-run alerting: the slow ratio uses min(n, window), but the
+    # fast window must fill before a spike verdict
+    assert g.slow_burn == pytest.approx(1.0 / slo.budget)
+    assert not g.alerting
+    for _ in range(3):
+        g.observe(True)
+    assert g.alerting  # 4/4 missed: both burns at 10x budget
+    for _ in range(8):
+        g.observe(False)
+    assert g.fast_sum == 0 and g.slow_sum == 0
+    assert not g.alerting
+
+
+# ---------------------------------------------------------------------------
+# category folding + attribution
+# ---------------------------------------------------------------------------
+
+
+def _spans(**kw):
+    d = {name: 0.0 for name in SPAN_ORDER}
+    d.update(kw)
+    return tuple(d[name] for name in SPAN_ORDER)
+
+
+def test_frame_categories_fold():
+    spans = _spans(
+        client=1.0,
+        uplink=5.0,
+        downlink=2.0,
+        **{"queue-wait": 3.0, "batch-gather": 4.0},
+        decode=6.0,
+        compute=7.0,
+    )
+    cat = _frame_categories(spans, link_wait=1.5)
+    by_name = dict(zip(CATEGORIES, cat))
+    assert by_name["client"] == 1.0
+    assert by_name["network"] == pytest.approx(5.0 + 2.0 - 1.5)
+    assert by_name["queueing"] == pytest.approx(3.0 + 4.0)
+    assert by_name["decode"] == 6.0
+    assert by_name["compute"] == 7.0
+    assert by_name["cell"] == 1.5
+    assert by_name["blackout"] == 0.0
+
+
+def _baseline_profile(frames=20):
+    base = _Profile()
+    for _ in range(frames):
+        base.add_frame("edge_0", _spans(compute=10e-3), 0.0, 1000)
+        base.add_frame("edge_1", _spans(compute=10e-3), 0.0, 1000)
+    return base
+
+
+def test_attributor_localizes_queueing_to_wait_samples():
+    mon = SLOMonitor()
+    base = _baseline_profile()
+    inc = _Profile()
+    for _ in range(10):
+        inc.add_frame(
+            "edge_1", _spans(compute=10e-3, **{"queue-wait": 30e-3}), 0.0, 1000
+        )
+        inc.add_wait("edge_1", 30e-3)
+        inc.add_wait("edge_0", 0.5e-3)
+    causes = mon._attribute(base, inc)
+    assert causes[0].category == "queueing"
+    assert causes[0].label == "queueing@edge_1"
+    assert causes[0].excess_s == pytest.approx(30e-3)
+
+
+def test_attributor_common_cause_pins_the_shared_cell():
+    mon = SLOMonitor()
+    base = _baseline_profile()
+    inc = _Profile()
+    # wire time inflated on BOTH edges, one shared medium observed
+    for edge in ("edge_0", "edge_1"):
+        for _ in range(10):
+            inc.add_frame(edge, _spans(compute=10e-3, uplink=40e-3), 0.0, 1000)
+            inc.add_media_wait("cell0", 0.0)
+    causes = mon._attribute(base, inc)
+    assert causes[0].label == "network@cell0"
+    # a single-spoke inflation localizes to that edge instead
+    lone = _Profile()
+    for _ in range(10):
+        lone.add_frame("edge_0", _spans(compute=10e-3, uplink=40e-3), 0.0, 1000)
+        lone.add_frame("edge_1", _spans(compute=10e-3), 0.0, 1000)
+        lone.add_media_wait("cell0", 0.0)
+    causes = mon._attribute(base, lone)
+    assert causes[0].label == "network@edge_0"
+
+
+def test_attributor_cell_and_blackout():
+    mon = SLOMonitor()
+    base = _baseline_profile()
+    inc = _Profile()
+    for _ in range(10):
+        inc.add_frame(
+            "edge_0", _spans(compute=10e-3, uplink=25e-3), 20e-3, 1000
+        )
+        inc.add_media_wait("cell0", 20e-3)
+        inc.add_blackout(50e-3)
+    causes = mon._attribute(base, inc)
+    labels = [c.label for c in causes]
+    assert labels[0] == "blackout"  # 50 ms/frame beats everything
+    assert "cell@cell0" in labels
+    blackout = causes[0]
+    assert blackout.locus is None  # downtime has no single edge
+    assert blackout.excess_s == pytest.approx(50e-3)
+    # only positive excesses rank: the baseline-only categories are out
+    assert all(c.excess_s > 0.0 for c in causes)
+
+
+def test_incident_summary_and_unknown_cause():
+    inc = Incident(workload="wl", slo="interactive", t_open=1.0)
+    assert inc.top_cause == "unknown"
+    inc.causes = (Cause("compute", "edge_2", 5e-3),)
+    inc.t_close = 2.0
+    s = inc.summary()
+    assert s["causes"][0]["label"] == "compute@edge_2"
+    assert s["causes"][0]["excess_ms_per_frame"] == pytest.approx(5.0)
+    assert json.dumps(s)  # JSON-able
+
+
+def test_doctor_verdict_weighs_incidents_by_misses():
+    mon = SLOMonitor()
+    assert doctor_verdict(mon) == (None, {})
+    a = Incident(workload="a", slo="interactive", t_open=0.0)
+    a.misses = 100
+    a.causes = (Cause("queueing", "edge_1", 10e-3),)
+    b = Incident(workload="b", slo="interactive", t_open=0.0)
+    b.misses = 2
+    b.causes = (Cause("network", "edge_0", 20e-3),)
+    mon.incidents.extend([a, b])
+    top, scores = doctor_verdict(mon)
+    assert top == "queueing@edge_1"  # 1.0 vs 0.04 despite smaller excess
+    assert scores["queueing@edge_1"] == pytest.approx(1.0)
+    assert scores["network@edge_0"] == pytest.approx(0.04)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: the doctor scenario, CI-sized
+# ---------------------------------------------------------------------------
+
+
+def _doctor_run(monitor, drifts=(), num_frames=120, **overrides):
+    topo, classes = hardware.doctor_star()
+    kw = dict(
+        num_clients=8,
+        num_frames=num_frames,
+        dispatch="least_queue",
+        policy=Policy.AUTO,
+        granularity="multi_step",
+        client_classes=classes,
+        workloads=workload_suite(),
+        codec=CodecConfig(
+            base=hardware.codec_point(entropy=True),
+            motion=sequence_motion(),
+            resync_bound=4,
+        ),
+        camera_fps=12,
+        migration=MigrationConfig(),
+        gather_window=2e-3,
+        drifts=list(drifts),
+        slo=monitor,
+    )
+    kw.update(overrides)
+    return run_fleet(topo, hardware.paper_staged(), **kw)
+
+
+def test_monitor_healthy_run_is_incident_free():
+    mon = SLOMonitor(classes=DOCTOR_CLASSES)
+    _doctor_run(mon)
+    assert mon.incidents == []
+    att = mon.attainment()
+    assert list(att) == sorted(att)  # deterministic key order
+    for wl, a in att.items():
+        assert a["observed"] > 0
+        assert not a["incident_open"]
+        assert a["slo"] in ("interactive", "best_effort")
+    assert "no incidents" in mon.format_incident_report()
+    # summary_json round-trips and is byte-stable
+    doc = json.loads(mon.summary_json())
+    assert doc["incidents"] == []
+    assert mon.summary_json() == mon.summary_json()
+
+
+def test_monitor_throttle_opens_and_attributes_incident():
+    mon = SLOMonitor(classes=DOCTOR_CLASSES)
+    _doctor_run(
+        mon,
+        drifts=FAULTS["edge_throttle"].drifts,
+        num_frames=160,
+    )
+    assert mon.incidents
+    inc = mon.incidents[0]
+    assert inc.t_open > 1.5  # after the injected drift
+    assert inc.misses > 0 and inc.frames > 0
+    assert inc.causes and inc.causes[0].label == "queueing@edge_1"
+    assert not math.isnan(inc.t_close)
+    assert inc.p99_est_s > DOCTOR_CLASSES["interactive"].deadline_s
+    top, _scores = doctor_verdict(mon)
+    assert top == "queueing@edge_1"
+    report = mon.format_incident_report()
+    assert "incident 0:" in report and "queueing@edge_1" in report
+
+
+def test_monitor_counts_structural_drops_as_misses():
+    # at 30 fps the mixed workloads' 50-85 ms loops shed load: holes in
+    # the frame-index sequence must burn the SLO budget as misses
+    mon = SLOMonitor(classes=DOCTOR_CLASSES)
+    r = _doctor_run(mon, num_frames=60, camera_fps=30)
+    assert any(c.stats.drop_rate > 0.0 for c in r.clients)
+    att = mon.attainment()
+    assert sum(a["misses"] for a in att.values()) > 0
+
+
+def test_slo_and_telemetry_are_mutually_exclusive():
+    from repro.cluster import Telemetry
+
+    topo, classes = hardware.doctor_star()
+    with pytest.raises(ValueError):
+        run_fleet(
+            topo,
+            hardware.paper_staged(),
+            num_clients=2,
+            num_frames=5,
+            client_classes=classes,
+            slo=SLOMonitor(),
+            telemetry=Telemetry(),
+        )
+
+
+def test_fault_catalog_is_well_formed():
+    assert set(FAULTS) == {
+        "edge_throttle",
+        "cell_collapse",
+        "lossy_keyframe",
+        "migration_flap",
+    }
+    for key, spec in FAULTS.items():
+        assert spec.name == key
+        assert spec.drifts and spec.expected and spec.summary
+        assert not (spec.migration is not None and spec.disable_migration)
+    assert FAULTS["lossy_keyframe"].disable_migration
+    assert FAULTS["migration_flap"].migration is not None
+    assert FAULTS["migration_flap"].migration.state_nbytes == 16_000_000

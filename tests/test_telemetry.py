@@ -73,7 +73,7 @@ def _everything_kwargs(num_clients=8, num_frames=40, seed=0,
 def _assert_spans_match_loops(result, tel):
     """Every frame's span fold == its ClientResult loop time, exactly."""
     by_client = {}
-    for client, _cls, _edge, idx, start, fin, spans in tel.frames:
+    for client, _cls, _wl, _edge, idx, start, fin, spans in tel.frames:
         by_client.setdefault(client, {})[idx] = (start, fin, spans)
     checked = 0
     for c in result.clients:
@@ -328,8 +328,8 @@ def test_registry_create_on_touch_and_snapshot():
 
 def test_verify_exact_raises_on_corruption():
     tel = _small_run()
-    client, cls, edge, idx, start, fin, spans = tel.frames[0]
-    tel.frames[0] = (client, cls, edge, idx, start, fin + 1.0, spans)
+    client, cls, wl, edge, idx, start, fin, spans = tel.frames[0]
+    tel.frames[0] = (client, cls, wl, edge, idx, start, fin + 1.0, spans)
     with pytest.raises(AssertionError):
         tel.verify_exact()
 
